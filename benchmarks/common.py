@@ -1,0 +1,76 @@
+"""Shared benchmark harness: train a config for N steps on the synthetic
+pipeline, timing steady-state step latency (the paper's 'actual observed
+latency, not theoretical FLOPS' methodology, scaled to this CPU host)."""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.config import ModelConfig, OptimizerConfig, TrainConfig
+from repro.models.model import param_counts
+from repro.models.transformer import init_params
+from repro.train.trainer import Trainer
+
+BENCH_OPT = OptimizerConfig(name="adafactor", learning_rate=0.3,
+                            warmup_steps=50, schedule="rsqrt")
+
+
+def train_and_measure(cfg: ModelConfig, *, steps: int = 200,
+                      seq_len: int = 64, global_batch: int = 8,
+                      seed: int = 0, task: str = "causal_lm") -> Dict:
+    tcfg = TrainConfig(steps=steps, seq_len=seq_len,
+                       global_batch=global_batch, checkpoint_every=0,
+                       log_every=10 ** 9, seed=seed, task=task,
+                       checkpoint_dir="/tmp/bench_nock",
+                       optimizer=BENCH_OPT)
+    tr = Trainer(cfg, tcfg)
+    res = tr.run(log=lambda s: None)
+    warm = tr.step_times[5:] or tr.step_times
+    step_s = statistics.median(warm)
+    hist = res["history"]
+    tail = hist[-max(len(hist) // 10, 1):]
+    pc = param_counts(tr.params)
+    return {
+        "name": cfg.name,
+        "loss": sum(h["loss"] for h in tail) / len(tail),
+        "accuracy": sum(h["accuracy"] for h in tail) / len(tail),
+        "step_ms": step_s * 1e3,
+        "examples_per_s": global_batch / step_s,
+        "emb_params": pc["embedding"],
+        "non_emb_params": pc["non_embedding"],
+        "params": pc["total"],
+    }
+
+
+def full_size_param_counts(cfg: ModelConfig) -> Dict[str, int]:
+    """Exact parameter counts of the FULL config via eval_shape (no
+    allocation) — used to reproduce paper Table 3/4 numbers."""
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda: init_params(key, cfg))
+    return param_counts(shapes)
+
+
+def measure_decode(cfg: ModelConfig, *, B: int = 4, prompt: int = 8,
+                   new: int = 16) -> Dict:
+    """Greedy decode latency per token (serving-side speed)."""
+    import jax.numpy as jnp
+    from repro.serve.engine import Engine
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    eng = Engine(cfg, params, max_len=prompt + new + 1)
+    toks = jax.random.randint(key, (B, prompt), 0, cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = eng.generate(toks, new)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return {"name": cfg.name, "decode_ms_per_token": dt / new * 1e3}
+
+
+def emit_csv(rows: List[Dict], cols: List[str]) -> None:
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r.get(c, ''):.6g}" if isinstance(r.get(c), float)
+                       else str(r.get(c, "")) for c in cols))

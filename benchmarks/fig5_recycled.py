@@ -1,0 +1,21 @@
+"""Paper Fig. 5 + App. G: Recycled-AltUp — strict pretrain improvement
+over baseline with ~zero added params and ~baseline speed (vs full AltUp
+which adds embedding params and a small slowdown)."""
+from repro.configs import t5
+from benchmarks.common import train_and_measure, measure_decode
+
+STEPS = 150
+
+
+def run():
+    base = t5.T5_TINY
+    rows = []
+    for cfg in (base, t5.altup(base, K=2, recycled=True),
+                t5.altup(base, K=2)):
+        r = train_and_measure(cfg, steps=STEPS, seq_len=64, global_batch=8)
+        rows.append(r)
+    return rows
+
+
+COLS = ["name", "loss", "accuracy", "step_ms", "emb_params",
+        "non_emb_params"]

@@ -1,0 +1,53 @@
+"""Kernel micro-bench: Pallas (interpret on CPU; compiled on TPU) vs the
+pure-jnp oracle, plus the HBM-bytes model that motivates the fusion (the
+fused AltUp kernel's claim is 1 read + 1 write of the (T, K, d) stream).
+us_per_call on CPU is NOT a TPU number — the derived column reports the
+bytes-roofline the kernel is designed to hit."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, n=5):
+    f(*args)[0] if isinstance(f(*args), tuple) else f(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+        jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    T, K, d = 1024, 2, 512
+    ks = jax.random.split(key, 5)
+    xw = jax.random.normal(ks[0], (T, K, d))
+    xt = jax.random.normal(ks[1], (T, d))
+    p = jnp.eye(K)
+    g = jnp.ones((K,))
+    sel = jnp.asarray([1.0, 0.0])
+    jit_ref = jax.jit(ref.altup_predict_correct_ref)
+    bytes_stream = (2 * T * K * d + 2 * T * d) * 4
+    rows.append({"name": "altup_fused(pallas-interp)",
+                 "us_per_call": _time(ops.altup_predict_correct, xw, xt,
+                                      sel, p, g),
+                 "derived": f"hbm_bytes_model={bytes_stream}"})
+    rows.append({"name": "altup_ref(jnp)",
+                 "us_per_call": _time(jit_ref, xw, xt, sel, p, g),
+                 "derived": "2-3x stream passes unfused"})
+    B, S, H, dh = 1, 256, 4, 64
+    q = jax.random.normal(ks[2], (B, S, H, dh))
+    kk = jax.random.normal(ks[3], (B, S, H, dh))
+    vv = jax.random.normal(ks[4], (B, S, H, dh))
+    rows.append({"name": "flash_attention(pallas-interp)",
+                 "us_per_call": _time(lambda *a: ops.mha_flash(
+                     *a, block_q=128, block_k=128), q, kk, vv),
+                 "derived": f"vmem_tiles={S//128}x{S//128}"})
+    return rows
+
+
+COLS = ["name", "us_per_call", "derived"]

@@ -1,0 +1,48 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,...] [--quick]
+
+Prints one CSV block per table (``name,us_per_call,derived`` style columns
+per module). Results land in benchmarks/results/*.csv too.
+"""
+import argparse
+import importlib
+import json
+import os
+import time
+
+MODULES = [
+    ("table1_k_sweep", "Paper Table 1: AltUp K in {1,2,4} x model size"),
+    ("table2_seq_altup", "Paper Table 2: sequence-length reduction"),
+    ("table3_params_speed", "Paper Table 3: param accounting + speed"),
+    ("table4_dense_scaling", "Paper Table 4: AltUp vs dense scaling"),
+    ("table6_moe", "Paper Table 6 (App C): AltUp + MoE synergy"),
+    ("table7_selection", "Paper Table 7 (App D): block-selection ablation"),
+    ("fig5_recycled", "Paper Fig 5: Recycled-AltUp"),
+    ("kernel_bench", "Pallas kernel micro-bench"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    outdir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(outdir, exist_ok=True)
+    from benchmarks.common import emit_csv
+    for mod_name, desc in MODULES:
+        if only and mod_name not in only:
+            continue
+        print(f"\n### {mod_name} — {desc}", flush=True)
+        t0 = time.time()
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        rows = mod.run()
+        emit_csv(rows, mod.COLS)
+        with open(os.path.join(outdir, f"{mod_name}.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# {mod_name} done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

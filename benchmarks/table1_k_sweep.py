@@ -1,0 +1,33 @@
+"""Paper Table 1: AltUp with varying K (baseline vs K=2 vs K=4), two model
+sizes — pretrain quality + speed on the synthetic task (CPU proxy for C4).
+Paper claim to reproduce: AltUp improves quality at ~equal layer compute;
+K=4 > K=2 in pretrain for larger models."""
+from repro.configs import t5
+from benchmarks.common import train_and_measure
+
+STEPS = 150
+
+
+def run():
+    rows = []
+    for base in (t5.T5_TINY, t5.T5_MINI):
+        for cfg in (base, t5.altup(base, K=2), t5.altup(base, K=4)):
+            rows.append(train_and_measure(cfg, steps=STEPS, seq_len=64,
+                                          global_batch=8))
+    # decoder-only LM at 300 steps: the clearest quality separation (the
+    # paper's headline claim) on the capacity-bound synthetic task
+    from repro.config import AltUpConfig, ModelConfig
+    lm = ModelConfig(name="lm-tiny", family="dense", n_layers=4,
+                     d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+                     vocab_size=512)
+    for cfg in (lm,
+                lm.replace(name="lm-tiny+altup2", altup=AltUpConfig(K=2)),
+                lm.replace(name="lm-tiny+altup2r",
+                           altup=AltUpConfig(K=2, recycled=True))):
+        rows.append(train_and_measure(cfg, steps=2 * STEPS, seq_len=64,
+                                      global_batch=8))
+    return rows
+
+
+COLS = ["name", "loss", "accuracy", "step_ms", "examples_per_s",
+        "emb_params", "non_emb_params"]

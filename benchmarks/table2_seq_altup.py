@@ -1,0 +1,24 @@
+"""Paper Table 2: sequence-length reduction on the encoder — baseline vs
+average pooling vs stride-and-skip vs Sequence-AltUp (stride 4, layers
+2..L-1). Claims: avgpool fastest/worst; Sequence-AltUp ~ stride-and-skip
+speed but much closer to baseline quality."""
+from repro.configs import t5
+from benchmarks.common import train_and_measure
+
+STEPS = 150
+
+
+def run():
+    base = t5.T5_TINY.replace(encoder_seq=128)
+    rows = []
+    for cfg in (base,
+                t5.seq_altup(base, 4, "avgpool"),
+                t5.seq_altup(base, 4, "stride_skip"),
+                t5.seq_altup(base, 4, "altup")):
+        rows.append(train_and_measure(cfg, steps=STEPS, seq_len=48,
+                                      global_batch=8,
+                                      task="span_corruption"))
+    return rows
+
+
+COLS = ["name", "loss", "accuracy", "step_ms", "examples_per_s"]

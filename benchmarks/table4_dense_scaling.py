@@ -1,0 +1,27 @@
+"""Paper Table 4: AltUp vs DENSE width scaling. AltUp-2x must be much
+faster than Dense-2x at comparable quality gain over baseline; param
+counts show AltUp grows embeddings only."""
+from repro.configs import t5
+from benchmarks.common import train_and_measure
+
+STEPS = 150
+
+
+def dense2x(cfg):
+    return cfg.replace(name=cfg.name + "+dense2x", d_model=cfg.d_model * 2,
+                       d_ff=cfg.d_ff * 2,
+                       head_dim=cfg.resolved_head_dim * 2)
+
+
+def run():
+    base = t5.T5_TINY
+    rows = []
+    for cfg in (base, t5.altup(base, K=2), dense2x(base),
+                t5.altup(base, K=4)):
+        rows.append(train_and_measure(cfg, steps=STEPS, seq_len=64,
+                                      global_batch=8))
+    return rows
+
+
+COLS = ["name", "loss", "accuracy", "step_ms", "examples_per_s",
+        "emb_params", "non_emb_params"]

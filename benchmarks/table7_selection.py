@@ -1,0 +1,24 @@
+"""Paper Table 7 (App. D): sub-block selection ablation — Sum method vs
+SameUp (same block each layer) vs AltUp (alternating). Claim: the
+predict-compute-correct scheme beats summation; alternating generally
+beats same for larger models."""
+import jax.numpy as jnp
+
+from repro.configs import t5
+from benchmarks.common import train_and_measure
+
+STEPS = 150
+
+
+def run():
+    base = t5.T5_TINY
+    rows = []
+    for cfg in (base,
+                t5.altup(base, K=2, selection="same"),
+                t5.altup(base, K=2)):
+        rows.append(train_and_measure(cfg, steps=STEPS, seq_len=64,
+                                      global_batch=8))
+    return rows
+
+
+COLS = ["name", "loss", "accuracy", "step_ms"]

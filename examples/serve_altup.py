@@ -1,0 +1,42 @@
+"""Serving example: batched greedy/temperature decode of an AltUp model
+with KV caches — demonstrates the paper's serving story (the widened
+stream adds ZERO KV-cache bytes because caches are built from the active
+d-wide block only).
+
+  PYTHONPATH=src python examples/serve_altup.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AltUpConfig, ModelConfig
+from repro.models.decode import init_cache
+from repro.models.transformer import init_params
+from repro.serve.engine import Engine
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    base = ModelConfig(name="serve-base", family="dense", n_layers=4,
+                       d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                       vocab_size=512)
+    wide = base.replace(name="serve-altup", altup=AltUpConfig(K=4))
+
+    for cfg in (base, wide):
+        params = init_params(key, cfg)
+        cache = init_cache(cfg, B=4, T=64)
+        cache_bytes = sum(x.size * x.dtype.itemsize
+                          for x in jax.tree_util.tree_leaves(cache))
+        eng = Engine(cfg, params, max_len=64)
+        prompts = jax.random.randint(key, (4, 8), 0, cfg.vocab_size)
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, n_new=16, temperature=0.8, key=key)
+        dt = (time.perf_counter() - t0) / 16 * 1e3
+        print(f"{cfg.name:12s} K={cfg.altup.K} cache={cache_bytes/1e6:.2f}MB "
+              f"decode={dt:.1f}ms/tok out[0]={out[0, :8].tolist()}")
+    print("note: 4x wider residual stream, identical KV-cache bytes.")
+
+
+if __name__ == "__main__":
+    main()

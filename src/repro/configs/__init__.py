@@ -1,0 +1,86 @@
+"""Architecture registry + input specs for every (arch x shape) cell."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ALL_SHAPES, AltUpConfig, ModelConfig, ShapeConfig,
+                          SHAPES_BY_NAME)
+
+_ARCH_MODULES = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "whisper-tiny": "whisper_tiny",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "gemma3-12b": "gemma3_12b",
+    "gemma3-4b": "gemma3_4b",
+    "granite-3-2b": "granite_3_2b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "zamba2-1.2b": "zamba2_1_2b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False, altup_k: int = 0,
+               recycled: Optional[bool] = None) -> ModelConfig:
+    """Look up an assigned architecture config.
+
+    altup_k > 1 wraps the architecture with the paper's technique. Recycled
+    defaults to True for very large vocabularies (emb-table cost, Sec 4.1).
+    """
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    cfg: ModelConfig = mod.SMOKE if smoke else mod.CONFIG
+    if altup_k and altup_k > 1:
+        if recycled is None:
+            recycled = cfg.vocab_size > 100_000
+        cfg = cfg.replace(altup=AltUpConfig(K=altup_k, recycled=recycled))
+    return cfg
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the reason it is skipped."""
+    sub_quadratic = (cfg.family in ("rwkv6", "hybrid")
+                     or cfg.window_size > 0)
+    if shape.name == "long_500k" and not sub_quadratic:
+        return ("pure full-attention arch: 500k decode requires "
+                "sub-quadratic attention (assignment: skip + note)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                for_loss: bool = True) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill -> full-sequence inputs; decode -> one token + caches
+    (cache specs come from eval_shape of init_cache: no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    ad = jnp.dtype(cfg.dtype)
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.n_image_tokens
+            specs["extra_embeds"] = sd((B, cfg.n_image_tokens, cfg.d_model),
+                                       ad)
+        specs["tokens"] = sd((B, s_text), i32)
+        if shape.kind == "train" and for_loss:
+            specs["labels"] = sd((B, s_text), i32)
+        if cfg.family == "encdec":
+            specs["encoder_frames"] = sd((B, cfg.encoder_seq, cfg.d_model),
+                                         ad)
+        return specs
+    # decode: one new token against a cache of length S
+    from repro.models.decode import init_cache
+    caches = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {
+        "tokens": sd((B, 1), i32),
+        "pos": sd((), i32),
+        "caches": caches,
+    }

@@ -1,0 +1,24 @@
+"""qwen3-0.6b [hf:Qwen/Qwen3 family]
+28L d_model=1024 16H (kv=8) head_dim=128 d_ff=3072 vocab=151936; qk-norm."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    dtype="bfloat16",
+    param_dtype="bfloat16",
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+    vocab_size=512, dtype="float32", param_dtype="float32",
+)

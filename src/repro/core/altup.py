@@ -1,0 +1,122 @@
+"""Alternating Updates (AltUp) — the paper's core contribution (Alg. 1).
+
+The residual stream is widened from d to K*d and carried as a (..., K, d)
+array of K contiguous sub-blocks. Each layer:
+
+  1. Predict : x_hat[i] = sum_j p[i, j] * x_old[j]        (K^2 scalars)
+  2. Compute : x_tilde = L(x_old[j*]),  j* = layer % K    (the width-d layer)
+  3. Correct : x_new[i] = x_hat[i] + g[i] * (x_tilde - x_hat[j*])   (K scalars)
+
+Everything here is shape-polymorphic over leading axes so the same code path
+serves training (B, S, K, d), decode (B, 1, K, d) and the Pallas kernel
+oracle (T, K, d).
+
+Initialization: p = I (predict "no change") and g = g_init (default 1) makes
+an AltUp model at init behave exactly like the baseline on the active block:
+x_new[j*] = L(x_old[j*]). This is the paper-faithful residual-like init.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AltUpConfig
+
+
+def init_altup_params(key: jax.Array, cfg: AltUpConfig, n_layers: int,
+                      dtype=jnp.float32) -> dict:
+    """Per-layer predictor p (L, K, K) and corrector g (L, K) scalars."""
+    del key  # deterministic init
+    K = cfg.K
+    p = jnp.tile(jnp.eye(K, dtype=dtype)[None], (n_layers, 1, 1))
+    g = jnp.full((n_layers, K), cfg.g_init, dtype=dtype)
+    return {"p": p, "g": g}
+
+
+def block_selector(layer_idx, K: int, selection: str):
+    """One-hot (K,) selector for the active sub-block of layer `layer_idx`.
+
+    Works with a traced layer index (inside lax.scan): the one-hot is
+    computed with iota/compare, no dynamic slicing.
+    """
+    if selection == "same":
+        j = jnp.zeros((), jnp.int32)
+    else:  # alternating (paper default): zero-based layer % K
+        j = jnp.asarray(layer_idx, jnp.int32) % K
+    return (jnp.arange(K, dtype=jnp.int32) == j).astype(jnp.float32)
+
+
+def predict(x_wide: jax.Array, p: jax.Array) -> jax.Array:
+    """Step 1: x_hat[i] = sum_j p[i,j] x_old[j].  x_wide: (..., K, d)."""
+    return jnp.einsum("ij,...jd->...id", p.astype(x_wide.dtype), x_wide)
+
+
+def select_block(x_wide: jax.Array, sel: jax.Array) -> jax.Array:
+    """Extract the active (..., d) block given a one-hot (K,) selector."""
+    return jnp.einsum("k,...kd->...d", sel.astype(x_wide.dtype), x_wide)
+
+
+def correct(x_hat: jax.Array, x_tilde: jax.Array, sel: jax.Array,
+            g: jax.Array) -> jax.Array:
+    """Step 3: x_new[i] = x_hat[i] + g[i] * (x_tilde - x_hat[j*])."""
+    sel = sel.astype(x_hat.dtype)
+    x_hat_sel = jnp.einsum("k,...kd->...d", sel, x_hat)
+    delta = (x_tilde - x_hat_sel)[..., None, :]          # (..., 1, d)
+    return x_hat + g.astype(x_hat.dtype)[..., :, None] * delta
+
+
+def altup_layer(layer_fn: Callable[[jax.Array], jax.Array],
+                x_wide: jax.Array, sel: jax.Array, p: jax.Array,
+                g: jax.Array, *, use_fused: bool = False) -> jax.Array:
+    """Full predict-compute-correct for one layer.
+
+    layer_fn : the unmodified width-d transformer layer (incl. residuals).
+    x_wide   : (..., K, d)
+    sel      : one-hot (K,) active-block selector
+    p, g     : (K, K), (K,) trainable scalars for this layer
+    """
+    x_hat = predict(x_wide, p)
+    x_active = select_block(x_wide, sel)
+    x_tilde = layer_fn(x_active)
+    if use_fused:
+        # the fused Pallas path recomputes predict+correct in one VMEM pass
+        from repro.kernels import ops as kops
+        return kops.altup_predict_correct(x_wide, x_tilde, sel, p, g)
+    return correct(x_hat, x_tilde, sel, g)
+
+
+# --------------------------------------------------------------------------
+# Embedding widening / recycling (paper Sec. 3 + Sec. 4.1)
+# --------------------------------------------------------------------------
+
+def widen_embedding(x_emb: jax.Array, cfg: AltUpConfig,
+                    wide_tail: jax.Array | None = None) -> jax.Array:
+    """Lift a token embedding to the widened (..., K, d) stream.
+
+    - Recycled-AltUp: replicate the d-wide lookup K times (no extra params).
+    - Full AltUp: `x_emb` is the first block, `wide_tail` holds the extra
+      (K-1) blocks from the K*d-wide table.
+    """
+    if not cfg.enabled:
+        return x_emb
+    if cfg.recycled:
+        return jnp.broadcast_to(x_emb[..., None, :],
+                                x_emb.shape[:-1] + (cfg.K, x_emb.shape[-1]))
+    assert wide_tail is not None
+    return jnp.concatenate([x_emb[..., None, :], wide_tail], axis=-2)
+
+
+def narrow_output(x_wide: jax.Array, cfg: AltUpConfig) -> jax.Array:
+    """Collapse the widened stream before the final d->|V| projection.
+
+    - Recycled-AltUp: elementwise-add the K blocks (O(Kd), paper Sec 4.1).
+    - Full AltUp: concatenate to K*d (the Kd->|V| matmul happens outside).
+    - Disabled: identity.
+    """
+    if not cfg.enabled:
+        return x_wide
+    if cfg.recycled:
+        return x_wide.sum(axis=-2)
+    return x_wide.reshape(x_wide.shape[:-2] + (x_wide.shape[-2] * x_wide.shape[-1],))

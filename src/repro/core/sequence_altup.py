@@ -1,0 +1,67 @@
+"""Sequence-AltUp (paper Sec. 4.2 / Alg. 2) + the Table-2 baselines.
+
+Given a layer L and stride k, only every k-th token is processed by L; a
+2-scalar predictor and 1-scalar corrector propagate contextual information
+to the skipped tokens:
+
+  Predict : y_hat_i = a1 * x_i + a2 * x_{floor(i/k)*k}
+  Compute : (y~_0, y~_k, ...) = L(x_0, x_k, ...)
+  Correct : y_i = y_hat_i + b * (y~_{floor(i/k)*k} - y_hat_{floor(i/k)*k})
+
+Baselines (paper Table 2): stride-and-skip (skipped tokens pass through
+unchanged) and average pooling (sequence immutably shortened).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def init_seq_altup_params(n_layers: int, dtype=jnp.float32) -> dict:
+    # a1=1, a2=0, b=1: at init sampled tokens get exactly L's output and
+    # skipped tokens pass through — matches the stride-and-skip baseline.
+    return {
+        "a1": jnp.ones((n_layers,), dtype),
+        "a2": jnp.zeros((n_layers,), dtype),
+        "b": jnp.ones((n_layers,), dtype),
+    }
+
+
+def _anchor_index(T: int, k: int) -> jax.Array:
+    """floor(i/k)*k for i in [T)."""
+    i = jnp.arange(T)
+    return (i // k) * k
+
+
+def seq_altup_layer(layer_fn: Callable[[jax.Array], jax.Array],
+                    x: jax.Array, k: int, a1, a2, b) -> jax.Array:
+    """x: (B, T, d). layer_fn maps (B, T', d) -> (B, T', d)."""
+    B, T, d = x.shape
+    anchors = _anchor_index(T, k)                       # (T,)
+    x_anchor = jnp.take(x, anchors, axis=1)             # (B, T, d)
+    y_hat = a1 * x + a2 * x_anchor                      # Predict
+    x_sub = x[:, ::k]                                   # subsample stride k
+    y_tilde_sub = layer_fn(x_sub)                       # Compute
+    # scatter the computed outputs back to their anchor positions
+    y_tilde = jnp.take(y_tilde_sub, jnp.arange(T) // k, axis=1)
+    y_hat_anchor = jnp.take(y_hat, anchors, axis=1)
+    return y_hat + b * (y_tilde - y_hat_anchor)         # Correct
+
+
+def stride_and_skip_layer(layer_fn, x: jax.Array, k: int) -> jax.Array:
+    """Baseline: only sampled tokens are updated; the rest pass through."""
+    B, T, d = x.shape
+    y_sub = layer_fn(x[:, ::k])
+    idx = jnp.arange(T)
+    on_stride = (idx % k) == 0
+    y_scatter = jnp.take(y_sub, idx // k, axis=1)
+    return jnp.where(on_stride[None, :, None], y_scatter, x)
+
+
+def avgpool_reduce(x: jax.Array, k: int) -> jax.Array:
+    """Baseline: immutably pool the sequence by k from the start."""
+    B, T, d = x.shape
+    Tp = T // k
+    return x[:, : Tp * k].reshape(B, Tp, k, d).mean(axis=2)

@@ -1,0 +1,104 @@
+"""Blocked online-softmax (Flash) attention Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention insight (IO-aware tiling): q/k/v
+stream through VMEM in (block_q x d) / (block_k x d) tiles sized for the
+MXU (128-aligned); the softmax running max/denominator and the output
+accumulator live in VMEM scratch across the kv-block grid dimension
+(TPU Pallas expresses the kv loop as the innermost "arbitrary" grid axis
+revisiting the same output block, rather than a CUDA-style inner loop).
+
+Supports causal masking and sliding windows (gemma-style local layers).
+Causal block skipping is expressed through masking here; on real TPU the
+kv axis would use a per-q-block upper bound via index remapping — noted
+in EXPERIMENTS §Perf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int,
+               block_q: int, block_k: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)              # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]                           # (bq, 1)
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))
+    alpha = jnp.exp(m_prev[:, 0] - m_new)
+    pexp = jnp.exp(s - m_new[:, None])
+    pexp = jnp.where(mask, pexp, 0.0)
+    l_new = alpha * l_scr[:, 0] + pexp.sum(axis=-1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot(pexp, v)
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q, k, v: (BH, S, dh) — GQA head expansion happens in ops.py.
+
+    Returns (BH, S, dh). interpret=True for CPU validation.
+    """
+    BH, S, dh = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    nq, nk = S // bq, T // bk
+    kern = functools.partial(_fa_kernel, scale=scale, causal=causal,
+                             window=window, block_q=bq, block_k=bk, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

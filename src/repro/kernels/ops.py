@@ -1,0 +1,66 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These are the entry points the model layers call when `use_pallas` is on
+(TPU); in this CPU container the kernels run under interpret=True and are
+validated against ref.py by the test suite.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import altup_fused, flash_attention, rwkv6_scan
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_d"))
+def altup_predict_correct(x_wide, x_tilde, sel, p, g, *, block_t=256,
+                          block_d=512):
+    """Shape-polymorphic wrapper: (..., K, d) stream + (..., d) computed
+    block -> fused predict+correct. Leading axes are flattened to T."""
+    lead = x_wide.shape[:-2]
+    K, d = x_wide.shape[-2:]
+    T = 1
+    for n in lead:
+        T *= n
+    bt = block_t
+    while T % bt and bt > 1:
+        bt //= 2
+    bd = block_d
+    while d % bd and bd > 1:
+        bd //= 2
+    out = altup_fused.altup_predict_correct(
+        x_wide.reshape(T, K, d), x_tilde.reshape(T, d), sel, p, g,
+        block_t=bt, block_d=bd, interpret=_INTERPRET)
+    return out.reshape(*lead, K, d)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def mha_flash(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
+    """q: (B, S, H, dh), k/v: (B, T, Hk, dh) with GQA expansion."""
+    B, S, H, dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    rep = H // Hk
+    kx = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vx = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], dh)
+    o = flash_attention.flash_attention(
+        fold(q), fold(kx), fold(vx), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_INTERPRET)
+    return o.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_wkv(r, k, v, w, u, *, chunk=128):
+    """r,k,v,w: (B, S, H, Dh); u: (H, Dh). Returns out + final state
+    (B, H, Dh, Dh)."""
+    B, S, H, Dh = r.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    ub = jnp.broadcast_to(u[None], (B, H, Dh)).reshape(B * H, Dh)
+    out, s = rwkv6_scan.rwkv6_wkv(fold(r), fold(k), fold(v), fold(w), ub,
+                                  chunk=chunk, interpret=_INTERPRET)
+    return (out.reshape(B, H, S, Dh).transpose(0, 2, 1, 3),
+            s.reshape(B, H, Dh, Dh))

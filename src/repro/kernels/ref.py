@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def altup_predict_correct_ref(x_wide, x_tilde, sel, p, g):
+    """x_wide (T, K, d), x_tilde (T, d), sel (K,), p (K, K), g (K,)."""
+    f32 = jnp.float32
+    xw = x_wide.astype(f32)
+    xhat = jnp.einsum("ij,tjd->tid", p.astype(f32), xw)
+    xhat_sel = jnp.einsum("k,tkd->td", sel.astype(f32), xhat)
+    delta = x_tilde.astype(f32) - xhat_sel
+    out = xhat + g.astype(f32)[None, :, None] * delta[:, None, :]
+    return out.astype(x_wide.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q, k, v: (BH, S|T, dh)."""
+    BH, S, dh = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (qp >= kp)
+    if window > 0:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask[None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", pr,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_wkv_ref(r, k, v, w, u):
+    """r,k,v,w: (BH, S, Dh); u: (BH, Dh)."""
+    f32 = jnp.float32
+
+    def one(rb, kb, vb, wb, ub):
+        def step(s, inp):
+            rt, kt, vt, wt = inp
+            kv = kt[:, None] * vt[None, :]
+            out = ((s + ub[:, None] * kv) * rt[:, None]).sum(axis=0)
+            return wt[:, None] * s + kv, out
+        s0 = jnp.zeros((rb.shape[-1], rb.shape[-1]), f32)
+        s, out = jax.lax.scan(step, s0, (rb.astype(f32), kb.astype(f32),
+                                         vb.astype(f32), wb.astype(f32)))
+        return out, s
+
+    out, s = jax.vmap(one)(r, k, v, w, u.astype(f32))
+    return out.astype(r.dtype), s

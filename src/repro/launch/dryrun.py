@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+the production mesh and extract the roofline terms.
+
+The two lines above MUST run before any jax import (device count locks at
+first init). Run as:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod] [--altup 2] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/
+
+Success criterion (assignment): .lower().compile() succeeds on the 16x16
+mesh AND the 2x16x16 multi-pod mesh for every applicable cell; the
+roofline table (single-pod) is derived from the same compiled artifacts.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ALL_SHAPES, SHAPES_BY_NAME, TPU_V5E, ModelConfig,
+                          OptimizerConfig, ShapeConfig, TrainConfig)
+from repro.configs import ARCH_IDS, get_config, input_specs, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import model_flops_per_token
+from repro.roofline.analysis import (cost_dict, memory_dict,
+                                     parse_collective_bytes, roofline_terms)
+from repro.sharding import (batch_pspec, batch_specs, make_shardings,
+                            param_pspecs)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               remat: str = "full", donate: bool = True):
+    """Returns (lowered, aux_info). No arrays are allocated — everything
+    is ShapeDtypeStructs + AOT lowering."""
+    from repro.models.decode import cache_pspecs
+    from repro.models.transformer import init_params, forward
+    from repro.train.train_step import init_opt_state, make_train_step
+
+    cfg = cfg.replace(remat=remat)
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda: init_params(key, cfg))
+    p_specs = param_pspecs(p_shapes, cfg, mesh)
+    p_sh = make_shardings(p_specs, mesh)
+
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(seq_len=shape.seq_len,
+                           global_batch=shape.global_batch,
+                           optimizer=OptimizerConfig(name="adafactor"))
+        step_fn = make_train_step(cfg, tcfg, mesh)
+        o_shapes = jax.eval_shape(
+            lambda: init_opt_state(p_shapes, tcfg.optimizer))
+        o_sh = make_shardings(param_pspecs(o_shapes, cfg, mesh), mesh)
+        b_sh = make_shardings(batch_specs(specs, mesh), mesh)
+        fn = jax.jit(step_fn,
+                     in_shardings=(p_sh, o_sh, b_sh, None),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1) if donate else ())
+        lowered = fn.lower(p_shapes, o_shapes, specs,
+                           jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return forward(params, cfg, batch["tokens"], mesh=mesh,
+                           extra_embeds=batch.get("extra_embeds"),
+                           encoder_frames=batch.get("encoder_frames"))[0]
+        b_sh = make_shardings(batch_specs(specs, mesh), mesh)
+        fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+        lowered = fn.lower(p_shapes, specs)
+    else:  # decode
+        from repro.train.train_step import make_serve_step
+        serve = make_serve_step(cfg, mesh)
+        c_sh = make_shardings(cache_pspecs(cfg, specs["caches"], mesh), mesh)
+        t_sh = make_shardings(batch_specs({"tokens": specs["tokens"]},
+                                          mesh), mesh)["tokens"]
+        fn = jax.jit(serve,
+                     in_shardings=(p_sh, c_sh, t_sh, None),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,) if donate else ())
+        lowered = fn.lower(p_shapes, specs["caches"], specs["tokens"],
+                           specs["pos"])
+    return lowered
+
+
+def kind_counts(cfg: ModelConfig) -> Dict[str, int]:
+    """Layer counts per unique (kind, ffn) — the differential-accounting
+    basis. Encoder layers are their own kind."""
+    from repro.models.transformer import layer_plan
+    counts: Dict[str, int] = {}
+    for seg in layer_plan(cfg):
+        k = seg.kind_key
+        counts[k] = counts.get(k, 0) + seg.n
+    if cfg.family == "encdec":
+        counts["enc"] = cfg.n_encoder_layers
+    return counts
+
+
+def reduced_variants(cfg: ModelConfig):
+    """Small-layer-count variants (scan fully unrolled) whose kind-count
+    vectors span {1} x kinds — lets us solve flops = c0 + sum_k n_k*body_k
+    exactly from compiled cost analyses (XLA counts while bodies once, so
+    full-depth scanned models can NOT be cost-analyzed directly)."""
+    import dataclasses as dc
+    u = dict(scan_unroll=True)
+    if cfg.family == "mla_moe":
+        fd = lambda n: dc.replace(cfg.moe, first_dense_layers=n)
+        return [cfg.replace(n_layers=2, moe=fd(1), **u),
+                cfg.replace(n_layers=3, moe=fd(2), **u),
+                cfg.replace(n_layers=3, moe=fd(1), **u)]
+    if cfg.family == "hybrid":
+        se = cfg.ssm.shared_every
+        return [cfg.replace(n_layers=1, **u),
+                cfg.replace(n_layers=2, **u),
+                cfg.replace(n_layers=se, **u)]
+    if cfg.family == "encdec":
+        return [cfg.replace(n_layers=1, n_encoder_layers=1, **u),
+                cfg.replace(n_layers=2, n_encoder_layers=1, **u),
+                cfg.replace(n_layers=1, n_encoder_layers=2, **u)]
+    if cfg.window_size > 0 and cfg.global_every > 0:
+        # gemma local:global pattern -> two attention kinds
+        return [cfg.replace(n_layers=1, **u),
+                cfg.replace(n_layers=2, **u),
+                cfg.replace(n_layers=cfg.global_every, **u)]
+    return [cfg.replace(n_layers=1, **u), cfg.replace(n_layers=2, **u)]
+
+
+def differential_costs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                       remat: str = "full") -> Dict:
+    """Compose full-model flops/bytes/collective-bytes from compiled
+    variants: solve for c0 (embed/logits/optimizer tail) + per-kind layer
+    bodies, then evaluate at the full layer counts."""
+    import numpy as np
+    variants = reduced_variants(cfg)
+    kinds = sorted({k for v in variants for k in kind_counts(v)}
+                   | set(kind_counts(cfg)))
+    rows, fl, by, co = [], [], [], []
+    for v in variants:
+        c = kind_counts(v)
+        lowered = lower_cell(v, shape, mesh, remat=remat)
+        compiled = lowered.compile()
+        ca = cost_dict(compiled)
+        coll = parse_collective_bytes(compiled.as_text())
+        rows.append([1.0] + [float(c.get(k, 0)) for k in kinds])
+        fl.append(ca.get("flops", 0.0))
+        by.append(ca.get("bytes accessed", 0.0))
+        co.append(coll["total"])
+    A = np.asarray(rows)
+    sol = {m: np.linalg.lstsq(A, np.asarray(b), rcond=None)[0]
+           for m, b in (("flops", fl), ("bytes", by), ("coll", co))}
+    full = kind_counts(cfg)
+    vec = np.asarray([1.0] + [float(full.get(k, 0)) for k in kinds])
+    totals = {m: float(vec @ s) for m, s in sol.items()}
+    bodies = {m: {k: float(sol[m][1 + i]) for i, k in enumerate(kinds)}
+              for m in sol}
+    return {"totals": totals, "bodies": bodies, "c0": {
+        m: float(sol[m][0]) for m in sol}, "kinds": kinds,
+        "counts": full, "variants_raw": {"flops": fl, "bytes": by,
+                                         "coll": co}}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             altup_k: int = 0, remat: str = "full", analyze: bool = True,
+             verbose: bool = True) -> Dict:
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = get_config(arch, altup_k=altup_k)
+    skip = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "altup_k": altup_k,
+           "multi_pod": multi_pod, "remat": remat}
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = lower_cell(cfg, shape, mesh, remat=remat)
+            compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t0
+        ca = cost_dict(compiled)
+        rec["cost_raw"] = {k: ca[k] for k in ("flops", "bytes accessed")
+                           if k in ca}
+        rec["memory"] = memory_dict(compiled)
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        rec["collectives_raw"] = coll
+        tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                       else (shape.seq_len if shape.kind ==
+                                             "prefill" else 1))
+        mf = model_flops_per_token(
+            cfg, "train" if shape.kind == "train" else "serve") * tokens
+        rec["model_flops_total"] = mf
+        if analyze:
+            with mesh:
+                diff = differential_costs(cfg, shape, mesh, remat=remat)
+            rec["cost"] = diff
+            rec["roofline"] = roofline_terms(
+                diff["totals"]["flops"], diff["totals"]["bytes"],
+                diff["totals"]["coll"], n_chips=n_chips,
+                model_flops_total=mf)
+        else:
+            rec["roofline"] = roofline_terms(
+                ca.get("flops", 0.0), ca.get("bytes accessed", 0.0),
+                coll["total"], n_chips=n_chips, model_flops_total=mf)
+        rec["status"] = "ok"
+        if verbose:
+            r = rec["roofline"]
+            print(f"[ok] {arch} x {shape_name} mesh={mesh.shape} "
+                  f"compile={rec['compile_s']:.1f}s "
+                  f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                  f"collective={r['collective_s']:.3e}s bound={r['bound']} "
+                  f"roofline_frac={r.get('roofline_frac', 0):.3f}",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[ERR] {arch} x {shape_name}: {rec['error']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--altup", type=int, default=0)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in ALL_SHAPES:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in cells:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for mp in meshes:
+            # roofline analysis on the single-pod mesh only (assignment);
+            # the multi-pod pass proves the "pod" axis shards.
+            results.append(run_cell(a, s, multi_pod=mp, altup_k=args.altup,
+                                    remat=args.remat, analyze=not mp))
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"dry-run: {ok} ok, {sk} skipped, {err} errors", flush=True)
+    sys.exit(1 if err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""§Perf hillclimb driver: re-run a dry-run cell under a named set of
+optimization levers and record the roofline-term deltas.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell gemma3-4b:train_4k \
+      --variant banded --out experiments/perf/...
+"""
+import argparse
+import json
+
+from repro.launch import dryrun
+from repro.config import SHAPES_BY_NAME
+from repro.configs import get_config
+
+# named lever sets (hypothesis -> config delta); composed left to right
+LEVERS = {
+    "baseline": {},
+    "remat_dots": {"remat": "dots"},
+    "remat_none": {"remat": "none"},
+    "fused_xent": {"fused_xent": True},
+    "banded": {"banded_local_attn": True},
+    "cp": {"context_parallel_attn": True},
+    "moe_out_pin": {"moe_out_pin": True},
+    "mla_pins": {"mla_attn_pins": True},
+    "altup2": {"_altup": 2},
+    "altup2_recycled": {"_altup": 2, "_recycled": True},
+    "altup2_full_emb": {"_altup": 2, "_recycled": False},
+}
+
+
+def run_variant(arch: str, shape_name: str, levers, *, multi_pod=False):
+    altup_k = 0
+    recycled = None
+    cfg_kw = {}
+    remat = "full"
+    for lv in levers:
+        for k, v in LEVERS[lv].items():
+            if k == "_altup":
+                altup_k = v
+            elif k == "_recycled":
+                recycled = v
+            elif k == "remat":
+                remat = v
+            else:
+                cfg_kw[k] = v
+
+    # monkey-patch get_config output through run_cell by temporarily
+    # wrapping — simplest: reproduce run_cell's flow with a modified cfg.
+    import time
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import model_flops_per_token
+    from repro.roofline.analysis import (cost_dict, memory_dict,
+                                         parse_collective_bytes,
+                                         roofline_terms)
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = get_config(arch, altup_k=altup_k, recycled=recycled)
+    if cfg_kw:
+        cfg = cfg.replace(**cfg_kw)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name, "levers": list(levers),
+           "remat": remat}
+    t0 = time.time()
+    with mesh:
+        lowered = dryrun.lower_cell(cfg, shape, mesh, remat=remat)
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t0
+        rec["memory"] = memory_dict(compiled)
+        diff = dryrun.differential_costs(cfg, shape, mesh, remat=remat)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    mf = model_flops_per_token(
+        cfg, "train" if shape.kind == "train" else "serve") * tokens
+    rec["cost"] = diff["totals"]
+    rec["bodies"] = diff["bodies"]
+    rec["roofline"] = roofline_terms(
+        diff["totals"]["flops"], diff["totals"]["bytes"],
+        diff["totals"]["coll"], n_chips=mesh.devices.size,
+        model_flops_total=mf)
+    r = rec["roofline"]
+    print(f"[{arch} x {shape_name}] {'+'.join(levers):30s} "
+          f"compute={r['compute_s']:.3e} memory={r['memory_s']:.3e} "
+          f"collective={r['collective_s']:.3e} bound={r['bound']} "
+          f"frac={r.get('roofline_frac', 0):.4f}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", required=True,
+                    help="comma list; '+' composes levers")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    results = []
+    for var in args.variants.split(","):
+        levers = var.split("+")
+        try:
+            results.append(run_variant(arch, shape, levers))
+        except Exception as e:  # noqa
+            import traceback
+            print(f"[ERR] {var}: {e}")
+            results.append({"levers": levers, "status": "error",
+                            "error": str(e),
+                            "traceback": traceback.format_exc()[-1500:]})
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

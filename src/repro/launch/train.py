@@ -1,0 +1,64 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      [--smoke] [--altup 2] [--steps 100] [--mesh dxm e.g. 2x2] \
+      [--ckpt DIR] [--resume] [--compress topk]
+
+On real hardware the mesh flag picks the production mesh; in this
+container small meshes use host devices (set JAX_PLATFORMS=cpu and
+XLA_FLAGS=--xla_force_host_platform_device_count=N before launch for
+multi-device CPU runs).
+"""
+import argparse
+
+import jax
+
+from repro.config import OptimizerConfig, TrainConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--altup", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mesh", default=None,
+                    help="DxM (e.g. 2x2), 'pod' (16x16) or 'multipod'")
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    mesh = None
+    if args.mesh == "pod":
+        mesh = make_production_mesh()
+    elif args.mesh == "multipod":
+        mesh = make_production_mesh(multi_pod=True)
+    elif args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+
+    cfg = get_config(args.arch, smoke=args.smoke, altup_k=args.altup)
+    tcfg = TrainConfig(
+        steps=args.steps, seq_len=args.seq, global_batch=args.batch,
+        microbatches=args.microbatches, checkpoint_every=50,
+        log_every=10, checkpoint_dir=args.ckpt,
+        optimizer=OptimizerConfig(name="adafactor",
+                                  learning_rate=args.lr,
+                                  warmup_steps=max(args.steps // 5, 10)))
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
+    trainer.install_preemption_handler()
+    if args.resume and trainer.maybe_resume():
+        print(f"resumed at step {trainer.step}")
+    res = trainer.run()
+    print(f"final: step={res['step']} loss={res['final_loss']}")
+
+
+if __name__ == "__main__":
+    main()

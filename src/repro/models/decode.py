@@ -1,0 +1,315 @@
+"""Single-token decode (serve_step) with per-layer caches.
+
+Cache layout mirrors the segment plan: one pytree per segment, stacked over
+the segment's layers so the decode layer loop is the same lax.scan as
+training (cache slices ride along as scan xs, updated slices come out as ys).
+
+Cache kinds:
+  attn : k, v      (n, B, T, Hk, Dh)   post-RoPE keys
+  mla  : latent    (n, B, T, r+qr)     compressed latents (head-free!)
+  rwkv : wkv       (n, B, H, Dh, Dh) + token-shift tails (n, B, d)
+  mamba: ssm       (n, B, H, Dh, N)  + conv tail (n, B, Kw-1, Cc)
+  shared_attn: k,v (B, T, Hk, Dh)      per shared-block invocation
+
+A note on AltUp economics (paper Sec. 3.2): caches are built from the
+ACTIVE d-wide sub-block only, so the widened (K*d) stream adds ZERO bytes
+to the KV cache — decode memory is identical to the unwidened model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.core import altup as alt
+from repro.models import layers as L
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models import moe as moe_lib
+from repro.models.transformer import (Segment, act_dtype, batch_axes,
+                                      layer_plan, _shard,
+                                      unembed, embed_tokens)
+
+
+def init_cache(cfg: ModelConfig, B: int, T: int,
+               dtype=None) -> Dict[str, Any]:
+    """Zero caches for a max sequence length T."""
+    ad = dtype or act_dtype(cfg)
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hk = cfg.n_kv_heads
+    caches: Dict[str, Any] = {}
+    for si, seg in enumerate(layer_plan(cfg)):
+        n = seg.n
+        if seg.kind == "attn":
+            c = {"k": jnp.zeros((n, B, T, hk, dh), ad),
+                 "v": jnp.zeros((n, B, T, hk, dh), ad)}
+        elif seg.kind == "shared_attn":
+            c = {"k": jnp.zeros((B, T, hk, dh), ad),
+                 "v": jnp.zeros((B, T, hk, dh), ad)}
+        elif seg.kind == "mla":
+            w = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            c = {"latent": jnp.zeros((n, B, T, w), ad)}
+        elif seg.kind == "rwkv":
+            H = d // cfg.rwkv.head_dim
+            hd = cfg.rwkv.head_dim
+            c = {"wkv": jnp.zeros((n, B, H, hd, hd), jnp.float32),
+                 "shift_tm": jnp.zeros((n, B, d), ad),
+                 "shift_cm": jnp.zeros((n, B, d), ad)}
+        elif seg.kind == "mamba":
+            s = cfg.ssm
+            d_in = s.expand * d
+            H = d_in // s.head_dim
+            cc = d_in + 2 * s.d_state
+            c = {"ssm": jnp.zeros((n, B, H, s.head_dim, s.d_state),
+                                  jnp.float32),
+                 "conv": jnp.zeros((n, B, s.d_conv - 1, cc), ad)}
+        else:
+            raise ValueError(seg.kind)
+        caches[f"seg{si}"] = c
+    if cfg.family == "encdec":
+        # cross-attention K/V over the (fixed) encoder output, one per
+        # decoder layer — filled once at prefill.
+        caches["cross"] = {
+            "k": jnp.zeros((cfg.n_layers, B, cfg.encoder_seq, hk, dh), ad),
+            "v": jnp.zeros((cfg.n_layers, B, cfg.encoder_seq, hk, dh), ad)}
+    return caches
+
+
+def cache_pspecs(cfg: ModelConfig, caches, mesh) -> Any:
+    """PartitionSpecs for the cache pytree: shard kv-heads over `model` when
+    divisible, otherwise shard the long sequence axis over ("data","model")
+    — the sequence-parallel cache layout used for long-context decode."""
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    nb = _nb(mesh)
+    bax = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v"):
+            batch_dim = 1 if leaf.ndim == 5 else 0   # stacked vs shared blk
+            lead = (None,) * batch_dim
+            B, T, hk = leaf.shape[batch_dim:batch_dim + 3]
+            b_ok = B % nb == 0
+            if b_ok and hk % msize == 0:
+                return P(*lead, bax, None, "model", None)
+            if b_ok and T % msize == 0:   # kv heads unshardable: seq/model
+                return P(*lead, bax, "model", None, None)
+            if b_ok:                      # (e.g. whisper 1500-frame cross)
+                return P(*lead, bax, None, None, None)
+            # tiny batch (long-context): sequence-parallel cache
+            return P(*lead, None, ("data", "model"), None, None)
+        if name == "latent":                          # (n, B, T, w)
+            if leaf.shape[1] % nb == 0:
+                return P(None, bax, "model", None)
+            return P(None, None, ("data", "model"), None)
+        if name in ("wkv", "ssm"):                    # (n, B, H, ., .)
+            b_ok = leaf.shape[1] % nb == 0
+            h_ok = leaf.shape[2] % msize == 0
+            return P(None, bax if b_ok else None,
+                     "model" if h_ok else None, None, None)
+        if name in ("shift_tm", "shift_cm"):          # (n, B, d)
+            return P(None, bax if leaf.shape[1] % nb == 0 else None, None)
+        if name == "conv":                            # (n, B, Kw-1, Cc)
+            return P(None, bax if leaf.shape[1] % nb == 0 else None,
+                     None, "model" if leaf.shape[3] % msize == 0 else None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+def _nb(mesh) -> int:
+    """Total batch shards."""
+    if mesh is None:
+        return 1
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _update_at(cache, new, pos):
+    """cache (B, T, ...), new (B, 1, ...) -> updated at position `pos`."""
+    idx = (0, pos) + (0,) * (cache.ndim - 2)
+    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), idx)
+
+
+def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None):
+    """One-token attention using + updating the cache slice."""
+    dh = cfg.resolved_head_dim
+    T = cache_k.shape[1]
+    q_pos = pos[None] if pos.ndim == 0 else pos
+    h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
+    # project current token k, v and write to cache
+    src = h
+    k_new = jnp.einsum("bsd,dhk->bshk", src, p_l["attn"]["wk"].astype(x.dtype))
+    v_new = jnp.einsum("bsd,dhk->bshk", src, p_l["attn"]["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        k_new = L.rms_norm(k_new, p_l["attn"]["k_norm"])
+    if not cfg.use_rel_pos_bias:
+        k_new = L.apply_rope(k_new, q_pos, cfg.rope_theta)
+    cache_k = _update_at(cache_k, k_new, pos)
+    cache_v = _update_at(cache_v, v_new, pos)
+    a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
+                             q_pos=q_pos, k_pos=jnp.arange(T),
+                             kv=(cache_k, cache_v))
+    x = x + a
+    if cross is not None:
+        cp, ck, cv = cross
+        h = L.rms_norm(x, cp["ln_cross"], cfg.logical_norm_eps)
+        c, _ = L.attention_block(cp["cross"], cfg, h,
+                                 window=jnp.zeros((), jnp.int32),
+                                 q_pos=q_pos, k_pos=jnp.arange(ck.shape[1]),
+                                 kv=(ck, cv), causal=False)
+        x = x + c
+    h = L.rms_norm(x, p_l["ln_ffn"], cfg.logical_norm_eps)
+    if "moe" in p_l:
+        f, _ = moe_lib.moe_block(p_l["moe"], cfg.moe, h, mesh=None,
+                                 activation=cfg.ffn_activation)
+    else:
+        f = L.ffn_block(p_l["ffn"], h, cfg.ffn_activation)
+    return x + f, cache_k, cache_v
+
+
+def decode_mla(p_l, cfg, x, cache_lat, pos):
+    q_pos = pos[None] if pos.ndim == 0 else pos
+    T = cache_lat.shape[1]
+    h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
+    lat_new = L.mla_latent(p_l["attn"], cfg, h, k_pos=q_pos)  # (B,1,w)
+    cache_lat = _update_at(cache_lat, lat_new, pos)
+    a = L.mla_attention(p_l["attn"], cfg, h, cache_lat, q_pos=q_pos,
+                        k_pos=jnp.arange(T))
+    x = x + a
+    h = L.rms_norm(x, p_l["ln_ffn"], cfg.logical_norm_eps)
+    if "moe" in p_l:
+        f, _ = moe_lib.moe_block(p_l["moe"], cfg.moe, h, mesh=None,
+                                 activation=cfg.ffn_activation)
+    else:
+        f = L.ffn_block(p_l["ffn"], h, cfg.ffn_activation)
+    return x + f, cache_lat
+
+
+def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
+                   *, mesh=None, cross_stack=None):
+    """x: (B, 1, [K,] d); returns (x, new cache)."""
+    K = cfg.altup.K
+    if seg.kind == "shared_attn":
+        def layer_fn(xa):
+            out, ck, cv = decode_attn(p_seg, cfg, xa, cache["k"], cache["v"],
+                                      pos, seg.window)
+            layer_fn.new_cache = {"k": ck, "v": cv}
+            return out
+        if cfg.altup.enabled:
+            sel = alt.block_selector(seg.layer_offset, K, cfg.altup.selection)
+            x = alt.altup_layer(layer_fn, x, sel, p_seg["altup_p"],
+                                p_seg["altup_g"])
+        else:
+            x = layer_fn(x)
+        return x, layer_fn.new_cache
+
+    n = seg.n
+    sels = (jnp.stack([alt.block_selector(i, K, cfg.altup.selection)
+                       for i in range(seg.layer_offset,
+                                      seg.layer_offset + n)])
+            if cfg.altup.enabled else jnp.zeros((n, 1)))
+
+    def body(x, per_layer):
+        p_l, cache_l, sel, cross_l = per_layer
+        window = seg.window
+        box = {}
+
+        def layer_fn(xa):
+            if seg.kind == "attn":
+                cross = None
+                if cross_l is not None:
+                    cross = (cross_l[0], cross_l[1]["k"], cross_l[1]["v"])
+                out, ck, cv = decode_attn(p_l, cfg, xa, cache_l["k"],
+                                          cache_l["v"], pos, window,
+                                          cross=cross)
+                box["cache"] = {"k": ck, "v": cv}
+            elif seg.kind == "mla":
+                out, lat = decode_mla(p_l, cfg, xa, cache_l["latent"], pos)
+                box["cache"] = {"latent": lat}
+            elif seg.kind == "rwkv":
+                state = {"wkv": cache_l["wkv"],
+                         "shift_tm": cache_l["shift_tm"],
+                         "shift_cm": cache_l["shift_cm"]}
+                from repro.models.transformer import rwkv_layer
+                out, _, st = rwkv_layer(p_l, cfg, xa, state)
+                box["cache"] = {"wkv": st["wkv"],
+                                "shift_tm": st["shift_tm"],
+                                "shift_cm": st["shift_cm"]}
+            elif seg.kind == "mamba":
+                from repro.models.transformer import mamba_layer
+                state = {"conv": cache_l["conv"], "ssm": cache_l["ssm"]}
+                out, _, st = mamba_layer(p_l, cfg, xa, state)
+                box["cache"] = {"conv": st["conv"], "ssm": st["ssm"]}
+            else:
+                raise ValueError(seg.kind)
+            return out
+
+        if cfg.altup.enabled:
+            x = alt.altup_layer(layer_fn, x, sel, p_l["altup_p"],
+                                p_l["altup_g"])
+        else:
+            x = layer_fn(x)
+        return x, box["cache"]
+
+    xs = (p_seg, cache, sels, cross_stack)
+    x, new_cache = jax.lax.scan(body, x, xs, unroll=seg.n if cfg.scan_unroll else 1)
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
+                mesh=None):
+    """serve_step: one new token per sequence.
+
+    tokens: (B, 1) int32; pos: scalar int32 position (uniform batch);
+    caches: from init_cache. Returns (logits (B, 1, V), new caches).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    x = _shard(x, mesh, P(batch_axes(mesh), *([None] * (x.ndim - 1))))
+    new_caches = dict(caches)
+    segs = layer_plan(cfg)
+    for si, seg in enumerate(segs):
+        cross_stack = None
+        if cfg.family == "encdec" and seg.kind == "attn":
+            cross_stack = (params["enc"]["cross"], caches["cross"])
+        p_seg = (params["shared_blk"] if seg.kind == "shared_attn"
+                 else params[f"seg{si}"])
+        x, nc = decode_segment(p_seg, caches[f"seg{si}"], seg,
+                               cfg, x, pos, mesh=mesh,
+                               cross_stack=cross_stack)
+        new_caches[f"seg{si}"] = nc
+    logits = unembed(params, cfg, x, mesh=mesh)
+    return logits, new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, T: int, *, mesh=None,
+            encoder_frames=None):
+    """Run the full prompt and build caches of capacity T (for examples
+    and correctness tests — decode_step consumes the result)."""
+    B, S = tokens.shape
+    caches = init_cache(cfg, B, T)
+    if cfg.family == "encdec":
+        from repro.models.transformer import encode
+        enc_out = encode(params, cfg, encoder_frames, mesh=mesh)
+        # fill cross caches per decoder layer
+        def fill(cross_l):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out,
+                           cross_l["cross"]["wk"].astype(enc_out.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", enc_out,
+                           cross_l["cross"]["wv"].astype(enc_out.dtype))
+            if not cfg.use_rel_pos_bias:
+                k = L.apply_rope(k, jnp.arange(k.shape[1]), cfg.rope_theta)
+            return k, v
+        ks, vs = jax.vmap(fill)(params["enc"]["cross"])
+        caches["cross"] = {"k": ks, "v": vs}
+    logits = None
+    for t in range(S):
+        logits, caches = decode_step(params, cfg, caches, tokens[:, t: t + 1],
+                                     jnp.asarray(t), mesh=mesh)
+    return logits, caches

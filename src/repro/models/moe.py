@@ -1,0 +1,250 @@
+"""Sparse Mixture-of-Experts with sort-based dispatch and explicit
+expert-parallel all-to-all (shard_map), plus the paper's App.-C
+"partial experts" form (shared always-on experts + routed experts).
+
+Design notes (TPU adaptation):
+* Dispatch is sort/gather based — NO one-hot dispatch einsum. A one-hot
+  (tokens, E, C) dispatch tensor costs O(n*E*C*d) matmul FLOPs which would
+  dominate the roofline for E=256 (DeepSeek); sort+gather costs ~0 FLOPs
+  and its bytes show up honestly in the memory term.
+* Expert parallelism: experts are sharded over the "model" mesh axis
+  (replicated over "data"/"pod"). Tokens are resharded so the flat token
+  axis spans ("data","model"), then a single all_to_all over "model" moves
+  each token to its expert's owner and back. This is the DeepSeek EP
+  communication pattern mapped onto jax.lax.all_to_all inside shard_map.
+* Capacity: per-source-shard capacity C = ceil(top_k * n_local / E * cf),
+  tokens over capacity are dropped (their contribution is 0 and the
+  combine weights renormalize over surviving assignments).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MoEConfig
+from repro.models.layers import dense_init, ffn_block, init_ffn
+
+
+def init_moe(key, d_model: int, moe: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    E, f = moe.padded_experts, moe.d_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, E), jnp.float32, in_axis=0),  # E = padded
+        "w1": dense_init(ks[1], (E, d_model, f), dtype, in_axis=1),
+        "w3": dense_init(ks[2], (E, d_model, f), dtype, in_axis=1),
+        "w2": dense_init(ks[3], (E, f, d_model), dtype, in_axis=1),
+    }
+    if moe.num_shared > 0:
+        p["shared"] = init_ffn(ks[4], d_model,
+                               moe.num_shared * moe.d_shared, dtype)
+    return p
+
+
+def router_probs(p: dict, moe: MoEConfig, x: jax.Array):
+    """x: (n, d) -> (probs (n, E) f32, aux load-balance loss)."""
+    logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32), p["router"])
+    if moe.padded_experts > moe.num_experts:   # mask padded experts
+        valid = jnp.arange(moe.padded_experts) < moe.num_experts
+        logits = jnp.where(valid[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, moe.top_k)        # (n,k)
+    # Switch aux-loss ingredients: f_e (fraction routed), P_e (mean prob)
+    Ep = moe.padded_experts
+    f_e = jnp.zeros((Ep,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0 / (top_i.size))
+    P_e = probs.mean(axis=0)
+    # renormalize the selected probabilities (DeepSeek/Qwen convention)
+    top_p = top_p / (top_p.sum(axis=-1, keepdims=True) + 1e-9)
+    return top_p, top_i, (f_e, P_e)
+
+
+def aux_loss(moe: MoEConfig, f_e: jax.Array, P_e: jax.Array) -> jax.Array:
+    """E * sum_e f_e * P_e — combine AFTER any cross-shard mean of f_e/P_e
+    (mean-of-products != product-of-means)."""
+    return moe.num_experts * jnp.sum(f_e * P_e)
+
+
+def _dispatch_indices(top_i: jax.Array, E: int, capacity: int):
+    """Sort-based dispatch bookkeeping.
+
+    top_i: (n, k) expert assignment. Returns:
+      order     : (n*k,) permutation sorting assignments by expert
+      slot      : (n*k,) position of each (sorted) assignment in its expert's
+                  capacity buffer (>= capacity means dropped)
+      expert_sorted : (n*k,) expert id in sorted order
+    """
+    n, k = top_i.shape
+    flat_e = top_i.reshape(-1)                             # (n*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    expert_sorted = flat_e[order]
+    # position within expert group = rank - start_of_group
+    counts = jnp.bincount(flat_e, length=E)                # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(n * k) - starts[expert_sorted]
+    return order, slot, expert_sorted
+
+
+def moe_ffn_local(p: dict, moe: MoEConfig, x: jax.Array,
+                  capacity: int) -> Tuple[jax.Array, jax.Array]:
+    """Single-device routed-experts FFN. x: (n, d) -> (n, d), aux loss.
+
+    Used directly on 1 device and as the reference for the EP path.
+    """
+    n, d = x.shape
+    E, k = moe.padded_experts, moe.top_k
+    top_p, top_i, (f_e, P_e) = router_probs(p, moe, x)
+    aux = aux_loss(moe, f_e, P_e)
+    order, slot, expert_sorted = _dispatch_indices(top_i, E, capacity)
+    keep = slot < capacity
+    tok_sorted = order // k                                # source token ids
+    # scatter tokens into (E, C, d) buffers
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    buf = buf.at[expert_sorted, jnp.minimum(slot, capacity - 1)].add(
+        jnp.where(keep[:, None], x[tok_sorted], 0))
+    # grouped expert FFN
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w3"].astype(x.dtype))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))
+    # gather back + combine with router weights
+    y_sorted = out_buf[expert_sorted, jnp.minimum(slot, capacity - 1)]
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    w_sorted = top_p.reshape(-1)[order].astype(x.dtype)
+    y = jnp.zeros_like(x).at[tok_sorted].add(y_sorted * w_sorted[:, None])
+    return y, aux
+
+
+def moe_ffn_ep(p: dict, x: jax.Array, *, moe: MoEConfig, capacity: int,
+               axis: str = "model",
+               all_axes: tuple = ("model",)) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel routed FFN — runs INSIDE shard_map.
+
+    x: (n_local, d) tokens local to this shard. Experts are sharded over
+    `axis` (size M): this shard owns E_local = E/M experts; p["w*"] here are
+    the local slices (E_local, ...). Communication = 2 all_to_all over axis.
+    """
+    n, d = x.shape
+    E, k = moe.padded_experts, moe.top_k
+    M = jax.lax.axis_size(axis)
+    E_local = E // M
+    # router is replicated: route against all E experts
+    top_p, top_i, (f_e, P_e) = router_probs(p, moe, x)
+    aux = aux_loss(moe, jax.lax.pmean(f_e, all_axes),
+                   jax.lax.pmean(P_e, all_axes))
+    order, slot, expert_sorted = _dispatch_indices(top_i, E, capacity)
+    keep = slot < capacity
+    tok_sorted = order // k
+    # per-source buffers for ALL experts: (E, C, d), grouped by owner shard
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    buf = buf.at[expert_sorted, jnp.minimum(slot, capacity - 1)].add(
+        jnp.where(keep[:, None], x[tok_sorted], 0))
+    buf = buf.reshape(M, E_local, capacity, d)
+    # all_to_all: axis m of buf -> device m; receive (M, E_local, C, d)
+    # = the slices every peer built for MY experts.
+    recv = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    # recv: (M, E_local, C, d) -> grouped matmul over local experts
+    g = recv.transpose(1, 0, 2, 3).reshape(E_local, M * capacity, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", g, p["w1"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", g, p["w3"].astype(x.dtype))
+    o = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))
+    o = o.reshape(E_local, M, capacity, d).transpose(1, 0, 2, 3)  # (M,El,C,d)
+    # return to sources
+    back = jax.lax.all_to_all(o, axis, split_axis=0, concat_axis=0,
+                              tiled=False)                  # (M, El, C, d)
+    out_buf = back.reshape(E, capacity, d)
+    y_sorted = out_buf[expert_sorted, jnp.minimum(slot, capacity - 1)]
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    w_sorted = top_p.reshape(-1)[order].astype(x.dtype)
+    y = jnp.zeros_like(x).at[tok_sorted].add(y_sorted * w_sorted[:, None])
+    return y, aux
+
+
+def capacity_for(n_tokens_local: int, moe: MoEConfig) -> int:
+    c = int(math.ceil(n_tokens_local * moe.top_k / moe.num_experts
+                      * moe.capacity_factor))
+    return max(c, 1)
+
+
+def moe_block(p: dict, moe: MoEConfig, x: jax.Array, *,
+              mesh: Optional[jax.sharding.Mesh] = None,
+              ep_axis: str = "model",
+              batch_axes: tuple = ("data",),
+              activation: str = "silu",
+              out_pin: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full MoE FFN sub-block on (B, S, d) activations.
+
+    Shared (always-on) experts run dense; routed experts go through the
+    sort-based dispatch — expert-parallel over `ep_axis` when a mesh with
+    that axis (size > 1) is active, single-device otherwise.
+    """
+    B, S, d = x.shape
+
+    def cstr(t, spec):
+        if mesh is None:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, jax.sharding.NamedSharding(mesh, spec))
+
+    y_shared = 0.0
+    if moe.num_shared > 0:
+        # keep the always-on experts in plain Megatron TP layout (batch
+        # over data axes, hidden over model) — without the pin, GSPMD
+        # propagates the routed path's 256-way flat-token sharding here
+        # and falls back to involuntary full rematerialization.
+        x_sh = cstr(x, P(batch_axes, None, None))
+        y_shared = ffn_block(p["shared"], x_sh, activation)
+        y_shared = cstr(y_shared, P(batch_axes, None, None))
+    flat = x.reshape(B * S, d)
+
+    if mesh is not None and ep_axis in mesh.axis_names and \
+            mesh.shape[ep_axis] > 1:
+        from jax.experimental.shard_map import shard_map
+        M = mesh.shape[ep_axis]
+        n_shards = M
+        for a in batch_axes:
+            if a in mesh.shape:
+                n_shards *= mesh.shape[a]
+        n_local = max(B * S // n_shards, 1)
+        cap = capacity_for(n_local, moe)
+        # round capacity so (M * cap) stays MXU-friendly where possible
+        tok_spec = P((*batch_axes, ep_axis))
+        local_params = {
+            "router": p["router"],
+            "w1": p["w1"], "w3": p["w3"], "w2": p["w2"],
+        }
+        pspec = {
+            "router": P(None, None),
+            "w1": P(ep_axis, None, None),
+            "w3": P(ep_axis, None, None),
+            "w2": P(ep_axis, None, None),
+        }
+        axes_in_mesh = tuple(a for a in (*batch_axes, ep_axis)
+                             if a in mesh.shape)
+        fn = shard_map(
+            partial(moe_ffn_ep, moe=moe, capacity=cap, axis=ep_axis,
+                    all_axes=axes_in_mesh),
+            mesh=mesh,
+            in_specs=(pspec, tok_spec),
+            out_specs=(tok_spec, P()),
+            check_rep=False,
+        )
+        y_flat, aux = fn(local_params, flat)
+    else:
+        cap = capacity_for(B * S, moe)
+        y_flat, aux = moe_ffn_local(p, moe, flat, cap)
+    out = y_shared + y_flat.reshape(B, S, d)
+    if out_pin:
+        # pin the block output back to the residual-stream layout.
+        # MEASURED trade-off (§Perf cell 2): on deepseek-v3 the leaked
+        # flat-token sharding is effectively free sequence parallelism —
+        # pinning FORCES a reshard per layer and quadruples collectives,
+        # so this stays off there; it exists for archs where the leak
+        # lands somewhere harmful.
+        out = cstr(out, P(batch_axes, None, None))
+    return out, aux

@@ -1,0 +1,198 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay, plus the RWKV channel-mix FFN.
+
+Recurrence per head (state S: (Dh, Dh)):
+    out_t = r_t^T (S_{t-1} + (u * k_t) v_t^T)        (read)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T            (decay + write)
+with w_t = exp(-exp(w_base + lora(x))) data-dependent decay (Finch),
+token-shift everywhere via data-dependent lerp (ddlerp).
+
+The sequence recurrence is a lax.scan (TPU adaptation: the chunked Pallas
+kernel in kernels/rwkv6_scan.py processes the same recurrence in VMEM-sized
+chunks; this file is the pure-JAX semantics used for training/dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    rw = cfg.rwkv
+    dh = rw.head_dim
+    H = d // dh
+    ks = jax.random.split(key, 16)
+    lo = rw.token_shift_lora
+    p = {
+        # time mix ------------------------------------------------------
+        "mu_x": jnp.full((5, d), 0.5, dtype),      # base lerp for r,k,v,w,g
+        "ts_a": dense_init(ks[0], (d, 5 * lo), dtype, in_axis=0),
+        "ts_b": jnp.zeros((5, lo, d), dtype),      # ddlerp LoRA (zero init)
+        "wr": dense_init(ks[1], (d, d), dtype, in_axis=0),
+        "twk": dense_init(ks[2], (d, d), dtype, in_axis=0),
+        "twv": dense_init(ks[3], (d, d), dtype, in_axis=0),
+        "wg": dense_init(ks[4], (d, d), dtype, in_axis=0),
+        "w_base": jnp.zeros((d,), dtype) - 6.0,    # decay ~ exp(-exp(-6))≈1
+        "w_a": dense_init(ks[5], (d, rw.decay_lora), dtype, in_axis=0),
+        "w_b": jnp.zeros((rw.decay_lora, d), dtype),
+        "u": jnp.zeros((H, dh), dtype),            # bonus for current token
+        "ln_x": init_rms_norm(d, dtype),           # per-head group norm
+        "two": dense_init(ks[6], (d, d), dtype, in_axis=0),
+        # channel mix ---------------------------------------------------
+        "mu_ck": jnp.full((d,), 0.5, dtype),
+        "mu_cr": jnp.full((d,), 0.5, dtype),
+        "ck": dense_init(ks[7], (d, cfg.d_ff), dtype, in_axis=0),
+        "cv": dense_init(ks[8], (cfg.d_ff, d), dtype, in_axis=0),
+        "cr": dense_init(ks[9], (d, d), dtype, in_axis=0),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x: (B, S, d) -> x shifted right by one; `prev` seeds position -1."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """The WKV recurrence. r,k,v,w: (B, S, H, Dh); state: (B, H, Dh, Dh).
+
+    Returns out (B, S, H, Dh) and final state. f32 state for stability.
+    """
+    B, S, H, Dh = r.shape
+    f32 = jnp.float32
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                    # (B, H, Dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, Dh, Dh)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         s + u[None, :, :, None].astype(f32) * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    seq = tuple(t.astype(f32).transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    state, out = jax.lax.scan(step, state.astype(f32), seq)
+    return out.transpose(1, 0, 2, 3), state
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 16):
+    """Chunked (matmul-form) WKV — the TPU-native formulation.
+
+    Mathematically identical to wkv_scan (tested against it): within a
+    chunk the recurrence is expressed as (Q, Q) masked matmuls using
+    cumulative-decay rescaling (r~ = r * A_{t-1}, k~ = k / A_s), and the
+    (Dh, Dh) state only crosses CHUNK boundaries (a length-S/Q lax.scan).
+    This matters twice: (1) MXU work instead of a length-S scalar loop,
+    (2) compiled-cost accounting sees the real FLOPs/bytes (a length-S
+    while body would be counted once by HLO cost analysis).
+
+    Numerics: f32 with chunk=16 bounds the 1/A dynamic range.
+    """
+    B, S, H, Dh = r.shape
+    f32 = jnp.float32
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zf = lambda t, val=0.0: jnp.pad(
+            t, [(0, 0), (0, pad), (0, 0), (0, 0)], constant_values=val)
+        r_p, k_p, v_p = zf(r), zf(k), zf(v)
+        w_p = zf(w, val=1.0)          # pad decay=1: no-op steps
+    else:
+        r_p, k_p, v_p, w_p = r, k, v, w
+    Sp = S + pad
+    nc = Sp // Q
+    # (B, nc, Q, H, Dh) -> (B, nc, H, Q, Dh)
+    cview = lambda t: t.astype(f32).reshape(B, nc, Q, H, Dh).transpose(
+        0, 1, 3, 2, 4)
+    rc, kc, vc, wc = map(cview, (r_p, k_p, v_p, w_p))
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    cum = jnp.cumsum(logw, axis=-2)                    # A_t (log), inclusive
+    A_in = jnp.exp(cum - logw)                         # A_{t-1}
+    A_inv = jnp.exp(-cum)                              # 1 / A_t
+    A_end = jnp.exp(cum[..., -1:, :])                  # A_Q
+    r_t = rc * A_in                                    # r~
+    k_t = kc * A_inv                                   # k~
+    # intra-chunk: strictly-lower-triangular (Q, Q) + bonus diagonal
+    M = jnp.einsum("bchqd,bchsd->bchqs", r_t, k_t)
+    tri = jnp.tril(jnp.ones((Q, Q), bool), -1)
+    M = jnp.where(tri[None, None, None], M, 0.0)
+    diag = jnp.einsum("bchqd,bchqd->bchq", rc,
+                      u[None, None, :, None, :].astype(f32) * kc)
+    out_intra = (jnp.einsum("bchqs,bchsd->bchqd", M, vc)
+                 + diag[..., None] * vc)
+    # chunk-boundary states: S_out = diag(A_Q) (S_in + k~^T v)
+    kv_chunk = jnp.einsum("bchsd,bchse->bchde", k_t, vc)  # (B,nc,H,Dh,Dh)
+
+    def boundary(s, inp):
+        a_end, kv = inp                                # (B,H,1,Dh),(B,H,D,D)
+        s_in = s
+        s = a_end[..., 0, :, None] * (s + kv)
+        return s, s_in
+
+    s_fin, s_in = jax.lax.scan(
+        boundary, state.astype(f32),
+        (A_end.transpose(1, 0, 2, 3, 4), kv_chunk.transpose(1, 0, 2, 3, 4)))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)               # (B,nc,H,Dh,Dh)
+    out_inter = jnp.einsum("bchqd,bchde->bchqe", r_t, s_in)
+    out = (out_intra + out_inter).transpose(0, 1, 3, 2, 4).reshape(
+        B, Sp, H, Dh)[:, :S]
+    return out, s_fin
+
+
+def rwkv_time_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+                  state: Optional[dict] = None):
+    """x: (B, S, d). state (decode): {"shift": (B,d), "wkv": (B,H,Dh,Dh)}."""
+    B, S, d = x.shape
+    dh = cfg.rwkv.head_dim
+    H = d // dh
+    prev = None if state is None else state["shift_tm"]
+    xs = _token_shift(x, prev)
+    # ddlerp: mu + lora(x) per projection
+    dx = xs - x
+    lo = cfg.rwkv.token_shift_lora
+    t = jnp.tanh(jnp.einsum("bsd,dl->bsl", x, p["ts_a"].astype(x.dtype)))
+    t = t.reshape(B, S, 5, lo)
+    dd = jnp.einsum("bsil,ild->bsid", t, p["ts_b"].astype(x.dtype))
+    mix = p["mu_x"].astype(x.dtype)[None, None] + dd        # (B,S,5,d)
+    xr, xk, xv, xw, xg = [x + dx * mix[:, :, i] for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["twk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["twv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+    # data-dependent decay (Finch)
+    w_log = p["w_base"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dl,le->bse", xw.astype(jnp.float32),
+        p["w_a"].astype(jnp.float32), p["w_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log))                            # in (0, 1)
+    hs = lambda z: z.reshape(B, S, H, dh)
+    s0 = (jnp.zeros((B, H, dh, dh), jnp.float32) if state is None
+          else state["wkv"])
+    wkv = wkv_scan if S == 1 else wkv_chunked
+    out, s_new = wkv(hs(r), hs(k), hs(v), hs(w.astype(x.dtype)),
+                     p["u"], s0)
+    out = out.reshape(B, S, d).astype(x.dtype)
+    out = rms_norm(out, p["ln_x"]) * g
+    out = jnp.einsum("bsd,de->bse", out, p["two"].astype(x.dtype))
+    new_state = {"shift_tm": x[:, -1], "wkv": s_new}
+    return out, new_state
+
+
+def rwkv_channel_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+                     state: Optional[dict] = None):
+    prev = None if state is None else state["shift_cm"]
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    xk = x + dx * p["mu_ck"].astype(x.dtype)
+    xr = x + dx * p["mu_cr"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(x.dtype))))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                   p["cr"].astype(x.dtype)))
+    return rr * vv, {"shift_cm": x[:, -1]}

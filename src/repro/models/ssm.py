@@ -1,0 +1,156 @@
+"""Mamba-2 (SSD, scalar-decay state space) block for the zamba2 hybrid.
+
+Per head h with state N: h_t = a_t * h_{t-1} + dt_t * B_t x_t^T (outer),
+y_t = C_t^T h_t + D * x_t, with a_t = exp(-dt_t * A_h) and scalar A per head.
+
+Train/prefill uses jax.lax.associative_scan over (decay, increment) pairs —
+the parallel-scan form of the recurrence (sub-quadratic, O(S log S) on the
+scan combinator but O(S) FLOPs in the pointwise work). Decode carries the
+(B, H, Dh, N) state and the conv-window tail.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+
+def init_mamba2_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    ks = jax.random.split(key, 6)
+    conv_dim = d_in + 2 * s.d_state
+    return {
+        # fused input projection -> [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], (d, 2 * d_in + 2 * s.d_state + H), dtype,
+                           in_axis=0),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dtype, in_axis=0),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),  # (H,)
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": init_rms_norm(d_in, dtype),
+        "w_out": dense_init(ks[2], (d_in, d), dtype, in_axis=0),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, S, C), w: (Kw, C). tail: (B, Kw-1, C)."""
+    Kw = w.shape[0]
+    pad = (jnp.zeros_like(x[:, : Kw - 1]) if tail is None else tail)
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, S+Kw-1, C)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None]
+              for i in range(Kw))
+    new_tail = xp[:, -(Kw - 1):] if Kw > 1 else None
+    return jax.nn.silu(out + b[None, None]), new_tail
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) per-step log decays -> (..., Q, Q) with
+    out[t, s] = sum_{u=s+1..t} a_u for t >= s, -inf otherwise."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh, Bm, Cm, dt, A, D, state0, chunk: int = 128):
+    """Chunked SSD (Mamba-2) recurrence.
+
+    xh: (B, S, H, Dh); Bm, Cm: (B, S, N); dt: (B, S, H) (post-softplus);
+    A: (H,) positive decay rates; state0: (B, H, Dh, N) or None.
+
+    Intra-chunk work is (Q, Q) matmuls (MXU-friendly); inter-chunk is a
+    length-S/Q lax.scan over the (B, H, Dh, N) state — this keeps peak
+    memory at (B, S/Q, H, Dh, N) instead of the naive (B, S, H, Dh, N).
+    Returns y (B, S, H, Dh) and the final state.
+    """
+    Bb, S, H, Dh = xh.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xh_p, Bm_p, Cm_p, dt_p = zf(xh), zf(Bm), zf(Cm), zf(dt)
+    else:
+        xh_p, Bm_p, Cm_p, dt_p = xh, Bm, Cm, dt
+    Sp = S + pad
+    nc = Sp // Q
+    # chunked views
+    xc = (xh_p.astype(f32) * dt_p.astype(f32)[..., None]).reshape(
+        Bb, nc, Q, H, Dh)                                   # dt-weighted input
+    Bc = Bm_p.astype(f32).reshape(Bb, nc, Q, N)
+    Cc = Cm_p.astype(f32).reshape(Bb, nc, Q, N)
+    # per-step log decay: -dt * A  (B, nc, Q, H) -> (B, nc, H, Q)
+    la = (-dt_p.astype(f32) * A[None, None].astype(f32)).reshape(
+        Bb, nc, Q, H).transpose(0, 1, 3, 2)
+    cum = jnp.cumsum(la, axis=-1)                           # (B,nc,H,Q)
+    L = jnp.exp(_segsum(la))                                # (B,nc,H,Q,Q)
+    # intra-chunk (diagonal) term
+    G = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)               # (B,nc,Q,Q)
+    M = G[:, :, None] * L                                   # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchls,bcshd->bclhd", M, xc)
+    # chunk-end states: contribution of each step decayed to chunk end
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)             # (B,nc,H,Q)
+    states = jnp.einsum("bchl,bcln,bclhd->bchdn",
+                        decay_to_end, Bc, xc)               # (B,nc,H,Dh,N)
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cum[..., -1])                     # (B,nc,H)
+    s_init = (jnp.zeros((Bb, H, Dh, N), f32) if state0 is None
+              else state0.astype(f32))
+
+    def step(s, inp):
+        dec, st = inp                                       # (B,H), (B,H,Dh,N)
+        s_out = s                                           # state entering chunk
+        s = dec[..., None, None] * s + st
+        return s, s_out
+
+    s_final, s_in = jax.lax.scan(
+        step, s_init, (chunk_decay.transpose(1, 0, 2),
+                       states.transpose(1, 0, 2, 3, 4)))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)                    # (B,nc,H,Dh,N)
+    # inter-chunk (off-diagonal) term: carried state read at each step
+    state_decay = jnp.exp(cum)                              # (B,nc,H,Q)
+    y_off = jnp.einsum("bcln,bchdn,bchl->bclhd", Cc, s_in, state_decay)
+    y = (y_diag + y_off).reshape(Bb, Sp, H, Dh)[:, :S]
+    y = y + D[None, None, :, None].astype(f32) * xh.astype(f32)
+    return y.astype(xh.dtype), s_final
+
+
+def mamba2_block(p: dict, cfg: ModelConfig, x: jax.Array,
+                 state: Optional[dict] = None):
+    """x: (B, S, d). state: {"conv": (B, Kw-1, Cc), "ssm": (B,H,Dh,N),
+    present only on the decode path}."""
+    B, S, d = x.shape
+    s = cfg.ssm
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    N = s.d_state
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    conv_tail = None if state is None else state["conv"]
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_tail)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, S, H, s.head_dim)
+    s0 = None if state is None else state["ssm"]
+    y, s_new = ssd_scan(xh, Bm, Cm, dt, A, p["D"], s0)
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    new_state = {"conv": new_tail if new_tail is not None
+                 else jnp.zeros((B, 0, xbc.shape[-1]), x.dtype),
+                 "ssm": s_new}
+    return out, new_state

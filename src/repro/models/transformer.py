@@ -1,0 +1,611 @@
+"""Decoder-only LM assembly: segments of homogeneous layers, scanned, with
+AltUp wrapping every block (paper Alg. 1 applied per transformer layer).
+
+A model is a list of Segments (homogeneous runs of layers). Each segment's
+parameters are stacked along a leading layer axis and consumed by lax.scan —
+this keeps the HLO size O(#segment kinds), which is what makes 61-layer
+512-device dry-run compiles tractable.
+
+Layer kinds:
+  attn        GQA attention (+ optional sliding window) + dense-or-MoE FFN
+  mla         DeepSeek multi-head latent attention + dense-or-MoE FFN
+  rwkv        RWKV-6 time-mix + channel-mix
+  mamba       Mamba-2 SSD block
+  shared_attn Zamba-2 style single shared attention+FFN block (tied weights,
+              invoked between mamba segments)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.core import altup as alt
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    v = cfg.vocab_size
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def act_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def prm_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# segment plan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str            # attn | mla | rwkv | mamba | shared_attn
+    n: int               # number of layers in this segment
+    ffn: str             # dense | moe | none
+    layer_offset: int    # zero-based global index of the first layer
+    window: int = 0      # static attention window (0 = full); gemma-style
+                         # local:global patterns become alternating segments
+
+    @property
+    def kind_key(self) -> str:
+        return f"{self.kind}/{self.ffn}/w{self.window}"
+
+
+def layer_plan(cfg: ModelConfig) -> List[Segment]:
+    f = cfg.family
+    if f in ("dense", "vlm", "encdec"):
+        if cfg.window_size > 0 and cfg.global_every > 0:
+            # gemma3 5:1 local:global -> alternating static segments
+            segs = []
+            off = 0
+            while off < cfg.n_layers:
+                nl = min(cfg.global_every - 1, cfg.n_layers - off)
+                if nl:
+                    segs.append(Segment("attn", nl, "dense", off,
+                                        window=cfg.window_size))
+                    off += nl
+                if off < cfg.n_layers:
+                    segs.append(Segment("attn", 1, "dense", off, window=0))
+                    off += 1
+            return segs
+        return [Segment("attn", cfg.n_layers, "dense", 0,
+                        window=cfg.window_size)]
+    if f == "moe":
+        return [Segment("attn", cfg.n_layers, "moe", 0,
+                        window=cfg.window_size)]
+    if f == "mla_moe":
+        nd = cfg.moe.first_dense_layers
+        segs = []
+        if nd:
+            segs.append(Segment("mla", nd, "dense", 0))
+        segs.append(Segment("mla", cfg.n_layers - nd, "moe", nd))
+        return segs
+    if f == "rwkv6":
+        return [Segment("rwkv", cfg.n_layers, "none", 0)]
+    if f == "hybrid":
+        # zamba2: runs of `shared_every` mamba layers, a shared attention
+        # block after each full run. The shared block counts as a layer for
+        # the AltUp alternating schedule.
+        se = cfg.ssm.shared_every
+        segs: List[Segment] = []
+        off, remaining = 0, cfg.n_layers
+        while remaining > 0:
+            n = min(se, remaining)
+            segs.append(Segment("mamba", n, "none", off))
+            off += n
+            remaining -= n
+            if remaining > 0 or n == se:
+                segs.append(Segment("shared_attn", 1, "dense", off))
+                off += 1
+        return segs
+    raise ValueError(f"unknown family {f}")
+
+
+def total_altup_layers(cfg: ModelConfig) -> int:
+    segs = layer_plan(cfg)
+    return max(s.layer_offset + s.n for s in segs)
+
+
+def layer_window(cfg: ModelConfig, global_idx: jax.Array) -> jax.Array:
+    """Per-layer attention window (traced OK). 0 = full attention."""
+    if cfg.window_size <= 0:
+        return jnp.zeros_like(jnp.asarray(global_idx))
+    if cfg.global_every <= 0:
+        return jnp.full_like(jnp.asarray(global_idx), cfg.window_size)
+    is_global = (jnp.asarray(global_idx) + 1) % cfg.global_every == 0
+    return jnp.where(is_global, 0, cfg.window_size)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _stack_init(key, n: int, init_fn) -> Any:
+    """Init `n` copies of a param tree, stacked on a leading axis."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_segment(key, seg: Segment, cfg: ModelConfig) -> Dict:
+    pd = prm_dtype(cfg)
+    d = cfg.d_model
+
+    def one_layer(k):
+        ks = jax.random.split(k, 4)
+        p: Dict[str, Any] = {}
+        if seg.kind in ("attn", "shared_attn"):
+            p["ln_attn"] = L.init_rms_norm(d, pd)
+            p["attn"] = L.init_attention(ks[0], cfg, pd)
+        elif seg.kind == "mla":
+            p["ln_attn"] = L.init_rms_norm(d, pd)
+            p["attn"] = L.init_mla(ks[0], cfg, pd)
+        elif seg.kind == "rwkv":
+            p["ln_tm"] = L.init_rms_norm(d, pd)
+            p["ln_cm"] = L.init_rms_norm(d, pd)
+            p["rwkv"] = rwkv_lib.init_rwkv_block(ks[0], cfg, pd)
+        elif seg.kind == "mamba":
+            p["ln"] = L.init_rms_norm(d, pd)
+            p["mamba"] = ssm_lib.init_mamba2_block(ks[0], cfg, pd)
+        if seg.ffn == "dense" and seg.kind in ("attn", "mla", "shared_attn"):
+            dff = cfg.d_ff
+            if seg.kind == "mla" and cfg.moe and cfg.moe.dense_d_ff:
+                dff = cfg.moe.dense_d_ff
+            p["ln_ffn"] = L.init_rms_norm(d, pd)
+            p["ffn"] = L.init_ffn(ks[1], d, dff, pd)
+        elif seg.ffn == "moe":
+            p["ln_ffn"] = L.init_rms_norm(d, pd)
+            p["moe"] = moe_lib.init_moe(ks[1], d, cfg.moe, pd)
+        if cfg.altup.enabled:
+            K = cfg.altup.K
+            p["altup_p"] = jnp.eye(K, dtype=jnp.float32)
+            p["altup_g"] = jnp.full((K,), cfg.altup.g_init, jnp.float32)
+        return p
+
+    if seg.kind == "shared_attn":
+        # single tied block — NOT stacked
+        return one_layer(key)
+    return _stack_init(key, seg.n, one_layer)
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    pd = prm_dtype(cfg)
+    V = padded_vocab(cfg)
+    d = cfg.d_model
+    K = cfg.altup.K
+    ks = jax.random.split(key, 8 + 16)
+    params: Dict[str, Any] = {}
+    emb_width = d if (not cfg.altup.enabled or cfg.altup.recycled) else K * d
+    params["embed"] = L.embed_init(ks[0], (V, emb_width), pd)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            ks[1], (emb_width if not cfg.altup.recycled else d, V), pd,
+            in_axis=0)
+    params["final_norm"] = L.init_rms_norm(
+        emb_width if (cfg.altup.enabled and not cfg.altup.recycled) else d, pd)
+    segs = layer_plan(cfg)
+    for si, seg in enumerate(segs):
+        if seg.kind == "shared_attn":
+            # Zamba-2: ONE shared attention+FFN block, weight-tied across
+            # all its invocations (AltUp scalars tied too; DESIGN.md).
+            if "shared_blk" not in params:
+                params["shared_blk"] = init_segment(ks[2 + si], seg, cfg)
+        else:
+            params[f"seg{si}"] = init_segment(ks[2 + si], seg, cfg)
+    if cfg.family == "encdec":
+        params["enc"] = init_encoder_params(ks[2 + len(segs)], cfg)
+    if cfg.family == "vlm":
+        params["img_proj"] = L.dense_init(
+            ks[2 + len(segs)], (d, d), pd, in_axis=0)
+    if cfg.seq_altup.enabled and cfg.seq_altup.mode == "altup":
+        from repro.core.sequence_altup import init_seq_altup_params
+        params["seq_altup"] = init_seq_altup_params(cfg.n_layers, jnp.float32)
+    if cfg.use_rel_pos_bias:
+        params["rel_bias_dec"] = L.dense_init(
+            ks[7], (cfg.rel_pos_buckets, cfg.n_heads), jnp.float32, in_axis=0)
+    return params
+
+
+def encoder_segment(cfg: ModelConfig) -> Segment:
+    return Segment("attn", cfg.n_encoder_layers, "dense", 0)
+
+
+def init_encoder_params(key, cfg: ModelConfig) -> Dict:
+    """Whisper/T5-style encoder. Built from the same Segment machinery as
+    the decoder so AltUp wraps encoder layers too (the paper widens the
+    full T5, encoder included)."""
+    pd = prm_dtype(cfg)
+    d = cfg.d_model
+
+    def one_cross(k):
+        return {
+            "ln_cross": L.init_rms_norm(d, pd),
+            "cross": L.init_attention(k, cfg, pd),
+        }
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    enc = {
+        "seg": init_segment(k1, encoder_segment(cfg), cfg),
+        "final_norm": L.init_rms_norm(d, pd),   # post block-mean: d-wide
+        # one cross-attention block per decoder layer
+        "cross": _stack_init(k2, cfg.n_layers, one_cross),
+    }
+    if cfg.use_rel_pos_bias:
+        enc["rel_bias_enc"] = L.dense_init(
+            k3, (cfg.rel_pos_buckets, cfg.n_heads), jnp.float32, in_axis=0)
+    return enc
+
+
+# --------------------------------------------------------------------------
+# the width-d layer bodies (the `L` that AltUp wraps)
+# --------------------------------------------------------------------------
+
+def _shard(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def batch_axes(mesh) -> tuple:
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def attn_ffn_layer(p, cfg: ModelConfig, x, *, window, q_pos, k_pos,
+                   kv=None, cache_update=None, mesh=None, seg_ffn="dense",
+                   bias=None, cross_p=None, enc_out=None, causal=None):
+    """One pre-norm transformer layer on the ACTIVE d-wide block.
+
+    Returns (x_out, aux_loss, new_kv). `kv` is a (k, v) cache slice for
+    decode; `cache_update` is a fn(kv_new) -> cache (dynamic update).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["ln_attn"], cfg.logical_norm_eps)
+    cp = (cfg.context_parallel_attn and mesh is not None
+          and "model" in mesh.axis_names and h.shape[1] > 1
+          and h.shape[1] % mesh.shape["model"] == 0)
+    if cp:
+        # context parallelism: queries sharded over "model" along the
+        # sequence; keys/values replicated (one all-gather of h) so each
+        # chip computes S/m x T scores instead of all heads x S x T.
+        bax = batch_axes(mesh)
+        h_q = _shard(h, mesh, P(bax, "model", None))
+        h_kv = _shard(h, mesh, P(bax, None, None))
+        a, kv_new = L.attention_block(p["attn"], cfg, h_q, window=window,
+                                      q_pos=q_pos, k_pos=k_pos, kv=kv,
+                                      bias=bias, causal=causal,
+                                      banded=cfg.banded_local_attn,
+                                      x_kv=h_kv if kv is None else None)
+        a = _shard(a, mesh, P(bax, "model", None))
+    else:
+        a, kv_new = L.attention_block(p["attn"], cfg, h, window=window,
+                                      q_pos=q_pos, k_pos=k_pos, kv=kv,
+                                      bias=bias, causal=causal,
+                                      banded=cfg.banded_local_attn)
+    x = x + a
+    if cp:
+        x = _shard(x, mesh, P(batch_axes(mesh), None, None))
+    if cross_p is not None:
+        h = L.rms_norm(x, cross_p["ln_cross"], cfg.logical_norm_eps)
+        c, _ = L.attention_block(
+            cross_p["cross"], cfg, h, window=jnp.zeros((), jnp.int32),
+            q_pos=q_pos, x_kv=enc_out, causal=False,
+            k_pos=jnp.arange(enc_out.shape[1]))
+        x = x + c
+    h = L.rms_norm(x, p["ln_ffn"], cfg.logical_norm_eps)
+    if seg_ffn == "moe":
+        f, aux = moe_lib.moe_block(p["moe"], cfg.moe, h, mesh=mesh,
+                                   batch_axes=batch_axes(mesh),
+                                   activation=cfg.ffn_activation,
+                                   out_pin=cfg.moe_out_pin)
+    else:
+        f = L.ffn_block(p["ffn"], h, cfg.ffn_activation)
+    return x + f, aux, kv_new
+
+
+def mla_layer(p, cfg: ModelConfig, x, *, q_pos, k_pos, latent=None,
+              mesh=None, seg_ffn="dense"):
+    """DeepSeek layer: MLA + FFN. latent = cache (decode) or None (computed).
+
+    Returns (x_out, aux, latent_new_tokens)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["ln_attn"], cfg.logical_norm_eps)
+    new_latent = L.mla_latent(p["attn"], cfg, h, k_pos=q_pos)
+    lat = new_latent if latent is None else latent
+    a = L.mla_attention(p["attn"], cfg, h, lat, q_pos=q_pos, k_pos=k_pos,
+                        mesh=mesh, batch_axes=batch_axes(mesh))
+    x = x + a
+    h = L.rms_norm(x, p["ln_ffn"], cfg.logical_norm_eps)
+    if seg_ffn == "moe":
+        f, aux = moe_lib.moe_block(p["moe"], cfg.moe, h, mesh=mesh,
+                                   batch_axes=batch_axes(mesh),
+                                   activation=cfg.ffn_activation,
+                                   out_pin=cfg.moe_out_pin)
+    else:
+        f = L.ffn_block(p["ffn"], h, cfg.ffn_activation)
+    return x + f, aux, new_latent
+
+
+def rwkv_layer(p, cfg: ModelConfig, x, state=None):
+    h = L.rms_norm(x, p["ln_tm"], cfg.logical_norm_eps)
+    a, st_tm = rwkv_lib.rwkv_time_mix(p["rwkv"], cfg, h, state)
+    x = x + a
+    h = L.rms_norm(x, p["ln_cm"], cfg.logical_norm_eps)
+    c, st_cm = rwkv_lib.rwkv_channel_mix(p["rwkv"], cfg, h, state)
+    new_state = {**st_tm, **st_cm}
+    return x + c, jnp.zeros((), jnp.float32), new_state
+
+
+def mamba_layer(p, cfg: ModelConfig, x, state=None):
+    h = L.rms_norm(x, p["ln"], cfg.logical_norm_eps)
+    m, new_state = ssm_lib.mamba2_block(p["mamba"], cfg, h, state)
+    return x + m, jnp.zeros((), jnp.float32), new_state
+
+
+# --------------------------------------------------------------------------
+# remat policy
+# --------------------------------------------------------------------------
+
+def remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens) -> jax.Array:
+    """tokens (B, S) -> widened stream (B, S, K, d) (or (B, S, d) if K=1)."""
+    ad = act_dtype(cfg)
+    emb = params["embed"].astype(ad)
+    x = jnp.take(emb, tokens, axis=0)                       # (B,S,emb_width)
+    if not cfg.altup.enabled:
+        return x
+    d, K = cfg.d_model, cfg.altup.K
+    if cfg.altup.recycled:
+        return alt.widen_embedding(x, cfg.altup)
+    x = x.reshape(x.shape[:-1] + (K, d))
+    return x
+
+
+def lift_embeds(x_emb: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Lift externally-provided d-wide embeddings (image patches, audio
+    frames) into the widened stream by replication."""
+    if not cfg.altup.enabled:
+        return x_emb
+    K = cfg.altup.K
+    return jnp.broadcast_to(x_emb[..., None, :],
+                            x_emb.shape[:-1] + (K, cfg.d_model))
+
+
+def apply_segment(p_seg, seg: Segment, cfg: ModelConfig, x, *, mesh,
+                  q_pos, k_pos, enc_out=None, cross_stack=None,
+                  rel_bias=None, causal=None):
+    """Run a full-sequence segment (train/prefill). x: (B,S,[K,]d)."""
+    K = cfg.altup.K
+    n = seg.n
+
+    if seg.kind == "shared_attn":
+        def layer_fn(xa):
+            out, aux, _ = attn_ffn_layer(
+                p_seg, cfg, xa, window=seg.window,
+                q_pos=q_pos, k_pos=k_pos, mesh=mesh, seg_ffn="dense")
+            return out
+        if cfg.altup.enabled:
+            sel = alt.block_selector(seg.layer_offset, K,
+                                     cfg.altup.selection)
+            x = alt.altup_layer(layer_fn, x, sel, p_seg["altup_p"],
+                                p_seg["altup_g"])
+        else:
+            x = layer_fn(x)
+        return x, jnp.zeros((), jnp.float32)
+
+    sels = (jnp.stack([alt.block_selector(i, K, cfg.altup.selection)
+                       for i in range(seg.layer_offset,
+                                      seg.layer_offset + n)])
+            if cfg.altup.enabled else jnp.zeros((n, 1)))
+
+    def body(x, per_layer):
+        p_l, sel, cross_l = per_layer
+
+        def layer_fn(xa):
+            if seg.kind in ("attn",):
+                out, aux, _ = attn_ffn_layer(
+                    p_l, cfg, xa, window=seg.window, q_pos=q_pos,
+                    k_pos=k_pos,
+                    mesh=mesh, seg_ffn=seg.ffn, bias=rel_bias,
+                    cross_p=cross_l, enc_out=enc_out, causal=causal)
+            elif seg.kind == "mla":
+                out, aux, _ = mla_layer(p_l, cfg, xa, q_pos=q_pos,
+                                        k_pos=k_pos, mesh=mesh,
+                                        seg_ffn=seg.ffn)
+            elif seg.kind == "rwkv":
+                out, aux, _ = rwkv_layer(p_l, cfg, xa)
+            elif seg.kind == "mamba":
+                out, aux, _ = mamba_layer(p_l, cfg, xa)
+            else:
+                raise ValueError(seg.kind)
+            return out, aux
+
+        if cfg.altup.enabled:
+            aux_box = []
+
+            def wrapped(xa):
+                out, aux = layer_fn(xa)
+                aux_box.append(aux)
+                return out
+
+            x = alt.altup_layer(wrapped, x, sel, p_l["altup_p"],
+                                p_l["altup_g"])
+            aux = aux_box[0]
+        else:
+            x, aux = layer_fn(x)
+        x = _shard(x, mesh,
+                   P(batch_axes(mesh), *([None] * (x.ndim - 1))))
+        return x, aux
+
+    body = remat_wrap(body, cfg)
+    xs = (p_seg, sels, cross_stack)
+    x, auxes = jax.lax.scan(body, x, xs, unroll=seg.n if cfg.scan_unroll else 1)
+    return x, auxes.sum()
+
+
+def forward(params, cfg: ModelConfig, tokens, *, mesh=None,
+            extra_embeds: Optional[jax.Array] = None,
+            encoder_frames: Optional[jax.Array] = None):
+    """Full-sequence forward -> (logits (B,S,V), aux_loss).
+
+    extra_embeds : (B, n_img, d) VLM patch embeddings (prepended).
+    encoder_frames: (B, S_enc, d) whisper frame embeddings (stub frontend).
+    """
+    ad = act_dtype(cfg)
+    x = embed_tokens(params, cfg, tokens)
+    if extra_embeds is not None:
+        img = jnp.einsum("bnd,de->bne", extra_embeds.astype(ad),
+                         params["img_proj"].astype(ad))
+        img = lift_embeds(img, cfg)
+        x = jnp.concatenate([img, x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    q_pos = jnp.arange(S)
+    enc_out = None
+    rel_bias = None
+    if cfg.use_rel_pos_bias:
+        rel_bias = L.t5_rel_bias(params["rel_bias_dec"], q_pos, q_pos,
+                                 cfg.rel_pos_buckets, bidirectional=False)
+    if cfg.family == "encdec":
+        enc_out = encode(params, cfg, encoder_frames, mesh=mesh)
+    x = _shard(x, mesh, P(batch_axes(mesh), *([None] * (x.ndim - 1))))
+    aux_total = jnp.zeros((), jnp.float32)
+    segs = layer_plan(cfg)
+    for si, seg in enumerate(segs):
+        cross_stack = None
+        if cfg.family == "encdec" and seg.kind == "attn":
+            cross_stack = params["enc"]["cross"]
+        p_seg = (params["shared_blk"] if seg.kind == "shared_attn"
+                 else params[f"seg{si}"])
+        x, aux = apply_segment(p_seg, seg, cfg, x, mesh=mesh,
+                               q_pos=q_pos, k_pos=q_pos, enc_out=enc_out,
+                               cross_stack=cross_stack, rel_bias=rel_bias)
+        aux_total = aux_total + aux
+    logits = unembed(params, cfg, x, mesh=mesh)
+    return logits, aux_total
+
+
+def unembed(params, cfg: ModelConfig, x, *, mesh=None):
+    ad = act_dtype(cfg)
+    x = alt.narrow_output(x, cfg.altup)                     # (B,S,d or Kd)
+    x = L.rms_norm(x, params["final_norm"], cfg.logical_norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(ad)                      # (V, width)
+        if cfg.altup.enabled and cfg.altup.recycled:
+            pass                                            # both d-wide
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(ad))
+    logits = _shard(logits, mesh, P(batch_axes(mesh), None, "model"))
+    return logits
+
+
+def encode(params, cfg: ModelConfig, enc_input, *, mesh=None):
+    """Encoder over either precomputed frame/patch embeddings (whisper's
+    stubbed conv frontend: float (B, S, d)) or token ids (T5: int (B, S)).
+    AltUp wraps encoder layers when enabled; the widened stream is averaged
+    over the K blocks at the end so cross-attention stays d-wide."""
+    enc = params["enc"]
+    ad = act_dtype(cfg)
+    if jnp.issubdtype(jnp.asarray(enc_input).dtype
+                      if not hasattr(enc_input, "dtype") else enc_input.dtype,
+                      jnp.integer):
+        x = embed_tokens(params, cfg, enc_input)
+    else:
+        x = lift_embeds(enc_input.astype(ad), cfg)
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    bias = None
+    if cfg.use_rel_pos_bias:
+        bias = L.t5_rel_bias(enc["rel_bias_enc"], pos, pos,
+                             cfg.rel_pos_buckets, bidirectional=True)
+    if cfg.seq_altup.enabled:
+        x = encode_seq_reduced(params, cfg, x, mesh=mesh)
+    else:
+        x, _ = apply_segment(enc["seg"], encoder_segment(cfg), cfg, x,
+                             mesh=mesh, q_pos=pos, k_pos=pos, rel_bias=bias,
+                             causal=False)
+    if cfg.altup.enabled:
+        x = x.mean(axis=-2)           # collapse K blocks for cross-attn
+    return L.rms_norm(x, enc["final_norm"], cfg.logical_norm_eps)
+
+
+def encode_seq_reduced(params, cfg: ModelConfig, x, *, mesh=None):
+    """Sequence-length-reduced encoder (paper Sec. 4.2 / Table 2).
+
+    Applies one of {Sequence-AltUp, stride-and-skip, average pooling} to
+    encoder layers [first_layer, L - last_layer_offset). Python-unrolled
+    (the Table-2 models are small); AltUp-K widening is not combined with
+    Sequence-AltUp, matching the paper."""
+    assert not cfg.altup.enabled, "seq_altup and width-AltUp not combined"
+    from repro.core import sequence_altup as seqalt
+    sa = cfg.seq_altup
+    enc = params["enc"]
+    n = cfg.n_encoder_layers
+    lo_reduce = sa.first_layer
+    hi_reduce = n - sa.last_layer_offset
+
+    def layer_at(i):
+        return jax.tree_util.tree_map(lambda a: a[i], enc["seg"])
+
+    def run_layer(p_l, xx):
+        S = xx.shape[1]
+        pos = jnp.arange(S)
+        bias = None
+        if cfg.use_rel_pos_bias:
+            bias = L.t5_rel_bias(enc["rel_bias_enc"], pos, pos,
+                                 cfg.rel_pos_buckets, bidirectional=True)
+        out, _, _ = attn_ffn_layer(p_l, cfg, xx, window=jnp.zeros((), jnp.int32),
+                                   q_pos=pos, k_pos=pos, mesh=mesh,
+                                   seg_ffn="dense", bias=bias, causal=False)
+        return out
+
+    if sa.mode == "avgpool":
+        x = seqalt.avgpool_reduce(x, sa.stride)
+        for i in range(n):
+            x = run_layer(layer_at(i), x)
+        return x
+
+    for i in range(n):
+        p_l = layer_at(i)
+        if lo_reduce <= i < hi_reduce:
+            if sa.mode == "altup":
+                pp = params["seq_altup"]
+                x = seqalt.seq_altup_layer(
+                    lambda xs: run_layer(p_l, xs), x, sa.stride,
+                    pp["a1"][i], pp["a2"][i], pp["b"][i])
+            else:  # stride_skip
+                x = seqalt.stride_and_skip_layer(
+                    lambda xs: run_layer(p_l, xs), x, sa.stride)
+        else:
+            x = run_layer(p_l, x)
+    return x

@@ -1,0 +1,74 @@
+"""Adafactor (Shazeer & Stern 2018) — the paper's optimizer.
+
+Factored second moments over the last two axes of >=2-D params (stacked
+scan params (L, m, n) factor per-layer), sublinear optimizer memory —
+this is what lets the 671B dry-run keep optimizer state ~free.
+Pure JAX, no optax.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPS1 = 1e-30
+EPS2 = 1e-3
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init_state(params) -> Dict[str, Any]:
+    def per_param(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                jnp.float32),                     # col
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"mu": jax.tree_util.tree_map(per_param, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + EPS1)
+
+
+def update(grads, state, params, lr, *, decay_pow: float = 0.8,
+           clip_threshold: float = 1.0) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (new_params, new_state). lr: scalar learning rate."""
+    step = state["step"] + 1
+    beta2 = 1.0 - jnp.power(step.astype(jnp.float32), -decay_pow)
+
+    def per_param(g, s, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + EPS1
+        if "vr" in s:
+            vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            # v̂ = vr vc / mean_row(vr)
+            denom = vr.mean(axis=-1, keepdims=True) + EPS1
+            vhat = (vr / denom)[..., None] * vc[..., None, :]
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta2 * s["v"] + (1 - beta2) * g2
+            new_s = {"v": vhat}
+        u = g32 * jax.lax.rsqrt(vhat + EPS1)
+        # update clipping (Adafactor's d=1.0 rule)
+        u = u / jnp.maximum(1.0, _rms(u) / clip_threshold)
+        # relative step size: scale by max(eps2, RMS(param))
+        scale = jnp.maximum(EPS2, _rms(p.astype(jnp.float32)))
+        new_p = (p.astype(jnp.float32) - lr * scale * u).astype(p.dtype)
+        return new_p, new_s
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["mu"])
+    out = [per_param(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}

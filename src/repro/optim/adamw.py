@@ -1,0 +1,42 @@
+"""AdamW — pure JAX."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, state, params, lr, *, b1=0.9, b2=0.999, eps=1e-8,
+           weight_decay=0.0) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - jnp.power(b1, t)
+    c2 = 1.0 - jnp.power(b2, t)
+
+    def per_param(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        upd = (m / c1) * jax.lax.rsqrt(v / c2 + eps * eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (upd + weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [per_param(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"m": treedef.unflatten([o[1] for o in out]),
+             "v": treedef.unflatten([o[2] for o in out]),
+             "step": step})

@@ -1,0 +1,20 @@
+"""LR schedules (paper: base LR 1.0, reciprocal sqrt decay, 10k warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+def learning_rate(ocfg: OptimizerConfig, step) -> jnp.ndarray:
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    w = float(max(ocfg.warmup_steps, 1))
+    if ocfg.schedule == "rsqrt":
+        return ocfg.learning_rate * jnp.minimum(
+            1.0 / jnp.sqrt(jnp.maximum(t, w)), t / (w * jnp.sqrt(w)))
+    if ocfg.schedule == "cosine":
+        frac = jnp.minimum(t / w, 1.0)
+        return ocfg.learning_rate * jnp.where(
+            t < w, frac, 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(
+                (t - w) / (10.0 * w), 1.0))))
+    return jnp.asarray(ocfg.learning_rate, jnp.float32)  # constant

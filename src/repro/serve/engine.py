@@ -1,0 +1,55 @@
+"""Batched serving engine: prefill + jitted greedy/temperature decode.
+
+The decode loop carries (caches, last_token, pos) through a jitted
+serve_step; batching is static (continuous batching is a scheduler-level
+concern left to the serving frontend — the engine exposes the batched
+step it would drive).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.decode import decode_step, init_cache, prefill
+from repro.models.transformer import padded_vocab
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int, mesh=None):
+        self.cfg, self.params, self.mesh = cfg, params, mesh
+        self.max_len = max_len
+        self._step = jax.jit(partial(decode_step, cfg=cfg, mesh=mesh))
+
+    def generate(self, prompt_tokens: jax.Array, n_new: int, *,
+                 temperature: float = 0.0, key=None,
+                 encoder_frames=None) -> jax.Array:
+        """prompt_tokens: (B, S). Returns (B, n_new) generated ids."""
+        cfg = self.cfg
+        B, S = prompt_tokens.shape
+        assert S + n_new <= self.max_len
+        logits, caches = prefill(self.params, cfg, prompt_tokens,
+                                 T=self.max_len, mesh=self.mesh,
+                                 encoder_frames=encoder_frames)
+        V = cfg.vocab_size
+        outs = []
+        tok = self._sample(logits[:, -1:], temperature, key, 0)
+        outs.append(tok)
+        for t in range(1, n_new):
+            logits, caches = self._step(self.params, caches=caches,
+                                        tokens=tok, pos=jnp.asarray(S + t - 1))
+            tok = self._sample(logits[:, -1:], temperature, key, t)
+            outs.append(tok)
+        return jnp.concatenate(outs, axis=1)
+
+    def _sample(self, logits, temperature, key, t):
+        V = self.cfg.vocab_size
+        logits = logits[..., :V]
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, t)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1).astype(jnp.int32)

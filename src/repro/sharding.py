@@ -1,0 +1,130 @@
+"""Parameter partitioning rules: param-tree path -> PartitionSpec.
+
+Strategy (TPU v5e, mesh ("pod",)"data","model"):
+  * TP over "model": attention heads, FFN hidden, MoE experts, vocab.
+  * Replicate whenever the axis is not divisible by the mesh axis size —
+    correctness first; the roofline/Perf loop is where layouts get tuned.
+  * 1-D params (norm scales, biases, decays) replicate.
+  * Stacked (scan) params carry a leading layer axis -> prepend None.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+# name -> (base_ndim, fn(shape, ms) -> base spec) where ms = model axis size
+_RULES = {
+    # embeddings / heads
+    "embed":   (2, lambda s, ms: P("model" if _div(s[0], ms) else None, None)),
+    "lm_head": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    # attention
+    "wq":   (3, lambda s, ms: P(None, "model" if _div(s[1], ms) else None, None)),
+    "wk":   (3, lambda s, ms: P(None, "model" if _div(s[1], ms) else None, None)),
+    "wv":   (3, lambda s, ms: P(None, "model" if _div(s[1], ms) else None, None)),
+    "wo":   (3, lambda s, ms: P("model" if _div(s[0], ms) else None, None, None)),
+    # MLA
+    "wq_a": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "wq_b": (3, lambda s, ms: P(None, "model" if _div(s[1], ms) else None, None)),
+    "wkv_a": (2, lambda s, ms: P(None, None)),
+    "wk_b": (3, lambda s, ms: P(None, "model" if _div(s[1], ms) else None, None)),
+    "wv_b": (3, lambda s, ms: P(None, "model" if _div(s[1], ms) else None, None)),
+    # dense FFN
+    "w1": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "w3": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "w2": (2, lambda s, ms: P("model" if _div(s[0], ms) else None, None)),
+    # MoE (expert-parallel over "model"); router replicated
+    "router": (2, lambda s, ms: P(None, None)),
+    # RWKV6 time/channel mix
+    "wr": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "twk": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "twv": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "two": (2, lambda s, ms: P("model" if _div(s[0], ms) else None, None)),
+    "wg": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "ck": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "cv": (2, lambda s, ms: P("model" if _div(s[0], ms) else None, None)),
+    "cr": (2, lambda s, ms: P(None, None)),
+    "ts_a": (2, lambda s, ms: P(None, None)),
+    "ts_b": (3, lambda s, ms: P(None, None, None)),
+    "w_a": (2, lambda s, ms: P(None, None)),
+    "w_b": (2, lambda s, ms: P(None, None)),
+    "u":   (2, lambda s, ms: P("model" if _div(s[0], ms) else None, None)),
+    "mu_x": (2, lambda s, ms: P(None, None)),
+    # Mamba-2
+    "w_in":  (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    "w_out": (2, lambda s, ms: P("model" if _div(s[0], ms) else None, None)),
+    "conv_w": (2, lambda s, ms: P(None, "model" if _div(s[1], ms) else None)),
+    # misc
+    "img_proj": (2, lambda s, ms: P(None, None)),
+    "rel_bias_dec": (2, lambda s, ms: P(None, None)),
+    "rel_bias_enc": (2, lambda s, ms: P(None, None)),
+    "altup_p": (2, lambda s, ms: P(None, None)),
+}
+
+# MoE expert weights share names with dense FFN but have base ndim 3 and an
+# expert-parallel leading axis. Disambiguated by path context below.
+_MOE_EXPERT = {
+    "w1": (3, lambda s, ms: P("model" if _div(s[0], ms) else None, None, None)),
+    "w3": (3, lambda s, ms: P("model" if _div(s[0], ms) else None, None, None)),
+    "w2": (3, lambda s, ms: P("model" if _div(s[0], ms) else None, None, None)),
+}
+
+
+def param_pspecs(params: Any, cfg: ModelConfig, mesh: Optional[Mesh]) -> Any:
+    """PartitionSpec tree matching `params` (works on ShapeDtypeStructs)."""
+    ms = mesh.shape.get("model", 1) if mesh is not None else 1
+
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        name = names[-1]
+        in_moe = "moe" in names and "shared" not in names
+        rules = _MOE_EXPERT if (in_moe and name in _MOE_EXPERT) else _RULES
+        if name not in rules:
+            return P(*([None] * leaf.ndim))         # replicate (1-D etc.)
+        base_nd, fn = rules[name]
+        base = fn(leaf.shape[leaf.ndim - base_nd:], ms)
+        extra = leaf.ndim - base_nd
+        assert extra in (0, 1), f"{names}: ndim {leaf.ndim} vs base {base_nd}"
+        return P(*([None] * extra), *base)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def make_shardings(tree_of_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Optional[Mesh]) -> P:
+    if mesh is None:
+        return P()
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes)
+
+
+def batch_specs(batch_tree: Any, mesh: Mesh) -> Any:
+    """Shard every batch array over the batch axes (dim 0)."""
+    bp = batch_pspec(mesh)
+    axes = bp[0] if len(bp) else ()
+    if isinstance(axes, str):
+        axes = (axes,)
+
+    def spec(leaf):
+        nb = 1
+        for a in (axes or ()):
+            nb *= mesh.shape[a]
+        if leaf.ndim >= 1 and leaf.shape[0] % max(nb, 1) == 0 and nb > 1:
+            return P(bp[0], *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map(spec, batch_tree)

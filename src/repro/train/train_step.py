@@ -1,0 +1,99 @@
+"""The jitted train step: loss -> grads -> clip -> optimizer, with
+microbatched gradient accumulation (lax.scan) and buffer donation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, OptimizerConfig, TrainConfig
+from repro.models.model import loss_fn
+from repro.optim import adafactor, adamw
+from repro.optim.schedules import learning_rate
+
+
+def init_opt_state(params, ocfg: OptimizerConfig):
+    if ocfg.name == "adafactor":
+        return adafactor.init_state(params)
+    return adamw.init_state(params)
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), gn
+
+
+def _microbatch(batch: Dict[str, jax.Array], n: int):
+    """Split the leading batch axis into (n, B/n, ...) for lax.scan."""
+    def r(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree_util.tree_map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    ocfg = tcfg.optimizer
+
+    def grads_and_metrics(params, batch):
+        if tcfg.microbatches > 1:
+            mb = _microbatch(batch, tcfg.microbatches)
+
+            def acc(carry, mbatch):
+                g_acc, m_acc = carry
+                (tot, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, cfg, mbatch, mesh=mesh)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree_util.tree_map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), ()
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": 0.0, "aux_loss": 0.0, "accuracy": 0.0}
+            m0 = jax.tree_util.tree_map(jnp.float32, m0)
+            (grads, metrics), _ = jax.lax.scan(acc, (g0, m0), mb)
+            inv = 1.0 / tcfg.microbatches
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m * inv, metrics)
+        else:
+            (tot, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, batch, mesh=mesh)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch, step):
+        grads, metrics = grads_and_metrics(params, batch)
+        if ocfg.clip_by_global_norm > 0:
+            grads, gn = clip_by_global_norm(grads,
+                                            ocfg.clip_by_global_norm)
+            metrics["grad_norm"] = gn
+        lr = learning_rate(ocfg, step)
+        metrics["lr"] = lr
+        if ocfg.name == "adafactor":
+            params, opt_state = adafactor.update(grads, opt_state, params,
+                                                 lr)
+        else:
+            params, opt_state = adamw.update(
+                grads, opt_state, params, lr, b1=ocfg.beta1, b2=ocfg.beta2,
+                weight_decay=ocfg.weight_decay)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    from repro.models.decode import decode_step
+
+    def serve_step(params, caches, tokens, pos):
+        return decode_step(params, cfg, caches, tokens, pos, mesh=mesh)
+
+    return serve_step

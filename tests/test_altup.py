@@ -1,0 +1,124 @@
+"""Unit + property tests for the paper's core algorithm (Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import altup as alt
+from repro.config import AltUpConfig
+
+
+def test_block_selector_alternating_cycles():
+    K = 4
+    for layer in range(12):
+        sel = alt.block_selector(layer, K, "alternating")
+        assert int(jnp.argmax(sel)) == layer % K
+        assert float(sel.sum()) == 1.0
+
+
+def test_block_selector_same_is_constant():
+    for layer in range(7):
+        sel = alt.block_selector(layer, 3, "same")
+        assert int(jnp.argmax(sel)) == 0
+
+
+@given(st.integers(2, 4), st.integers(1, 8), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_altup_active_block_equals_layer_output_at_init(K, T, layer):
+    """With p = I and g = 1 (the paper-faithful init), the active block of
+    x_new equals L(x_active) exactly, and inactive blocks keep their old
+    value plus the correction."""
+    d = 8
+    rng = np.random.RandomState(K * 100 + T)
+    x = jnp.asarray(rng.randn(T, K, d), jnp.float32)
+    p = jnp.eye(K)
+    g = jnp.ones((K,))
+    sel = alt.block_selector(layer, K, "alternating")
+    j = layer % K
+
+    layer_fn = lambda xa: jnp.tanh(xa) * 2.0 + xa
+    out = alt.altup_layer(layer_fn, x, sel, p, g)
+    want_active = layer_fn(x[:, j])
+    np.testing.assert_allclose(out[:, j], want_active, rtol=1e-6, atol=1e-6)
+    # inactive blocks: x_old_i + (x_tilde - x_old_j) since p = I, g = 1
+    for i in range(K):
+        if i != j:
+            want = x[:, i] + (want_active - x[:, j])
+            np.testing.assert_allclose(out[:, i], want, rtol=1e-5,
+                                       atol=1e-5)
+
+
+@given(st.integers(2, 4))
+@settings(max_examples=10, deadline=None)
+def test_correct_formula_matches_paper(K):
+    """x_new[i] = x_hat[i] + g_i (x_tilde - x_hat[j*]) — element-wise."""
+    T, d = 3, 5
+    rng = np.random.RandomState(K)
+    x = jnp.asarray(rng.randn(T, K, d), jnp.float32)
+    p = jnp.asarray(rng.randn(K, K), jnp.float32)
+    g = jnp.asarray(rng.randn(K), jnp.float32)
+    j = 1 % K
+    sel = (jnp.arange(K) == j).astype(jnp.float32)
+    x_tilde = jnp.asarray(rng.randn(T, d), jnp.float32)
+    x_hat = alt.predict(x, p)
+    out = alt.correct(x_hat, x_tilde, sel, g)
+    for i in range(K):
+        want = x_hat[:, i] + g[i] * (x_tilde - x_hat[:, j])
+        np.testing.assert_allclose(out[:, i], want, rtol=1e-5, atol=1e-5)
+
+
+def test_predict_is_block_mix():
+    K, T, d = 3, 2, 4
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(T, K, d), jnp.float32)
+    p = jnp.asarray(rng.randn(K, K), jnp.float32)
+    out = alt.predict(x, p)
+    want = np.einsum("ij,tjd->tid", p, x)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+
+def test_recycled_widen_replicates():
+    cfg = AltUpConfig(K=3, recycled=True)
+    x = jnp.arange(12.0).reshape(2, 6)
+    wide = alt.widen_embedding(x, cfg)
+    assert wide.shape == (2, 3, 6)
+    for k in range(3):
+        np.testing.assert_array_equal(wide[:, k], x)
+
+
+def test_narrow_output_recycled_sums_blocks():
+    cfg = AltUpConfig(K=2, recycled=True)
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 2, 8), jnp.float32)
+    out = alt.narrow_output(x, cfg)
+    np.testing.assert_allclose(out, x.sum(axis=1), rtol=1e-6)
+
+
+def test_narrow_output_full_concats_blocks():
+    cfg = AltUpConfig(K=2, recycled=False)
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 2, 8), jnp.float32)
+    out = alt.narrow_output(x, cfg)
+    assert out.shape == (4, 16)
+    np.testing.assert_array_equal(out[:, :8], x[:, 0])
+    np.testing.assert_array_equal(out[:, 8:], x[:, 1])
+
+
+def test_altup_param_count_matches_paper():
+    """K^2 + K extra scalars per layer (paper Sec. 3.2 'Parameter count')."""
+    from repro.configs import t5
+    from repro.models.transformer import init_params
+    key = jax.random.PRNGKey(0)
+    base = t5.T5_TINY
+    plus = t5.altup(base, K=2)
+    p0 = init_params(key, base)
+    p1 = init_params(key, plus)
+    from repro.models.model import param_counts
+    c0, c1 = param_counts(p0), param_counts(p1)
+    # embedding params exactly double with K = 2
+    assert c1["embedding"] == 2 * c0["embedding"]
+    K = 2
+    n_altup_layers = base.n_layers + base.n_encoder_layers
+    extra = c1["non_embedding"] - c0["non_embedding"]
+    # K^2+K per layer + the (K d - d) widening of the decoder final norm
+    expected = (K * K + K) * n_altup_layers + base.d_model * (K - 1)
+    assert extra == expected, (extra, expected)

@@ -1,0 +1,81 @@
+"""Sequence-AltUp (paper Alg. 2) unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sequence_altup as sa
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _layer(x):
+    return jnp.tanh(x) + 0.5 * x
+
+
+def test_stride1_equals_plain_layer():
+    x = jax.random.normal(KEY, (2, 8, 4))
+    out = sa.seq_altup_layer(_layer, x, 1, 1.0, 0.0, 1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_layer(x)),
+                               rtol=1e-6)
+
+
+def test_alg2_formula_manual():
+    """y_i = y_hat_i + b (y~_anchor - y_hat_anchor) with
+    y_hat_i = a1 x_i + a2 x_anchor — checked element-wise."""
+    B, T, d, k = 1, 9, 3, 4
+    x = jax.random.normal(KEY, (B, T, d))
+    a1, a2, b = 0.7, 0.2, 0.9
+    out = sa.seq_altup_layer(_layer, x, k, a1, a2, b)
+    y_sub = _layer(x[:, ::k])
+    for i in range(T):
+        anchor = (i // k) * k
+        y_hat_i = a1 * x[:, i] + a2 * x[:, anchor]
+        y_hat_anchor = a1 * x[:, anchor] + a2 * x[:, anchor]
+        want = y_hat_i + b * (y_sub[:, anchor // k] - y_hat_anchor)
+        np.testing.assert_allclose(np.asarray(out[:, i]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_at_init_sampled_tokens_get_exact_layer_output():
+    """a1=1, a2=0, b=1 (the framework init): on-stride tokens get exactly
+    L(x) — i.e. Sequence-AltUp starts as stride-and-skip + context."""
+    x = jax.random.normal(KEY, (2, 12, 4))
+    k = 4
+    out = sa.seq_altup_layer(_layer, x, k, 1.0, 0.0, 1.0)
+    want = _layer(x[:, ::k])
+    np.testing.assert_allclose(np.asarray(out[:, ::k]), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_stride_and_skip_passthrough():
+    x = jax.random.normal(KEY, (2, 12, 4))
+    k = 3
+    out = sa.stride_and_skip_layer(_layer, x, k)
+    # off-stride tokens unchanged
+    for i in range(12):
+        if i % k != 0:
+            np.testing.assert_array_equal(np.asarray(out[:, i]),
+                                          np.asarray(x[:, i]))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(out[:, i]), np.asarray(_layer(x[:, ::k])[:, i // k]),
+                rtol=1e-6)
+
+
+def test_avgpool_shapes_and_values():
+    x = jnp.arange(24.0).reshape(1, 8, 3)
+    out = sa.avgpool_reduce(x, 4)
+    assert out.shape == (1, 2, 3)
+    np.testing.assert_allclose(np.asarray(out[0, 0]),
+                               np.asarray(x[0, :4].mean(0)))
+
+
+def test_skipped_tokens_receive_context():
+    """The paper's key claim vs stride-and-skip: skipped tokens DO change
+    (receive contextual information) under Sequence-AltUp."""
+    x = jax.random.normal(KEY, (1, 8, 4))
+    out = sa.seq_altup_layer(_layer, x, 4, 1.0, 0.0, 1.0)
+    skipped = [i for i in range(8) if i % 4 != 0]
+    for i in skipped:
+        assert float(jnp.abs(out[:, i] - x[:, i]).max()) > 1e-4

@@ -1,0 +1,38 @@
+"""Serving engine tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AltUpConfig, ModelConfig
+from repro.models.transformer import init_params, forward
+from repro.serve.engine import Engine
+
+CFG = ModelConfig(name="srv", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                  altup=AltUpConfig(K=2))
+KEY = jax.random.PRNGKey(0)
+
+
+def test_greedy_decode_matches_forward_argmax():
+    params = init_params(KEY, CFG)
+    prompts = jax.random.randint(KEY, (2, 6), 0, CFG.vocab_size)
+    eng = Engine(CFG, params, max_len=16)
+    out = eng.generate(prompts, n_new=4)
+    # teacher-forced check: feeding prompt+generated through full forward
+    # reproduces each greedy choice
+    seq = jnp.concatenate([prompts, out], axis=1)
+    logits, _ = forward(params, CFG, seq)
+    for t in range(4):
+        pos = prompts.shape[1] + t - 1
+        want = jnp.argmax(logits[:, pos, :CFG.vocab_size], axis=-1)
+        np.testing.assert_array_equal(np.asarray(out[:, t]),
+                                      np.asarray(want))
+
+
+def test_temperature_sampling_in_vocab():
+    params = init_params(KEY, CFG)
+    prompts = jax.random.randint(KEY, (2, 4), 0, CFG.vocab_size)
+    eng = Engine(CFG, params, max_len=16)
+    out = eng.generate(prompts, n_new=6, temperature=1.0, key=KEY)
+    assert int(out.max()) < CFG.vocab_size
+    assert int(out.min()) >= 0

@@ -1,0 +1,103 @@
+"""Every (arch x shape) cell's input specs + cache specs are well-formed,
+and the assignment's skip rules are exactly as documented."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ALL_SHAPES, SHAPES_BY_NAME
+from repro.configs import (ARCH_IDS, get_config, input_specs,
+                           shape_applicable)
+
+FULL_ATTENTION_SKIPS = {"qwen2-moe-a2.7b", "deepseek-v3-671b",
+                        "whisper-tiny", "llava-next-mistral-7b",
+                        "granite-3-2b", "qwen3-0.6b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", [s.name for s in ALL_SHAPES])
+def test_cell_specs_wellformed(arch, shape):
+    cfg = get_config(arch)
+    sh = SHAPES_BY_NAME[shape]
+    skip = shape_applicable(cfg, sh)
+    if shape == "long_500k":
+        assert (skip is not None) == (arch in FULL_ATTENTION_SKIPS)
+    else:
+        assert skip is None
+    if skip:
+        return
+    specs = input_specs(cfg, sh)
+    assert "tokens" in specs
+    if sh.kind in ("train", "prefill"):
+        s_total = specs["tokens"].shape[1]
+        if cfg.family == "vlm":
+            s_total += specs["extra_embeds"].shape[1]
+        assert s_total == sh.seq_len
+        assert specs["tokens"].shape[0] == sh.global_batch
+    else:
+        assert specs["tokens"].shape == (sh.global_batch, 1)
+        assert "caches" in specs and "pos" in specs
+        # cache capacity equals the context length
+        leaves = jax.tree_util.tree_leaves(specs["caches"])
+        assert len(leaves) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_configs_match_assignment(arch):
+    """Spot-check the assigned hyperparameters landed verbatim."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen2-moe-a2.7b": (24, 2048, 16, 151936),
+        "deepseek-v3-671b": (61, 7168, 128, 129280),
+        "whisper-tiny": (4, 384, 6, 51865),
+        "rwkv6-1.6b": (24, 2048, 32, 65536),
+        "llava-next-mistral-7b": (32, 4096, 32, 32000),
+        "gemma3-12b": (48, 3840, 16, 262144),
+        "gemma3-4b": (34, 2560, 8, 262144),
+        "granite-3-2b": (40, 2048, 32, 49155),
+        "qwen3-0.6b": (28, 1024, 16, 151936),
+        "zamba2-1.2b": (38, 2048, 32, 32000),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads,
+            cfg.vocab_size) == expected
+
+
+def test_layer_plans_cover_all_layers():
+    from repro.models.transformer import layer_plan
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        plan = layer_plan(cfg)
+        n = sum(s.n for s in plan if s.kind != "shared_attn")
+        assert n == cfg.n_layers, (arch, n)
+        # offsets are contiguous
+        off = 0
+        for seg in plan:
+            assert seg.layer_offset == off
+            off += seg.n
+
+
+@given(st.sampled_from(list(ARCH_IDS)), st.integers(2, 4))
+@settings(max_examples=12, deadline=None)
+def test_altup_wrap_preserves_param_structure(arch, K):
+    """Property: enabling AltUp K on any arch adds exactly the K-dependent
+    params (p, g per layer + widened embed unless recycled)."""
+    cfg0 = get_config(arch, smoke=True)
+    cfgk = get_config(arch, smoke=True, altup_k=K, recycled=True)
+    sh0 = jax.eval_shape(lambda: __import__(
+        "repro.models.transformer", fromlist=["init_params"]).init_params(
+            jax.random.PRNGKey(0), cfg0))
+    shk = jax.eval_shape(lambda: __import__(
+        "repro.models.transformer", fromlist=["init_params"]).init_params(
+            jax.random.PRNGKey(0), cfgk))
+    n0 = sum(x.size for x in jax.tree_util.tree_leaves(sh0))
+    nk = sum(x.size for x in jax.tree_util.tree_leaves(shk))
+    # recycled: embed unchanged; only +K^2+K scalars per wrapped layer
+    extra = nk - n0
+    from repro.models.transformer import layer_plan
+    # shared_attn blocks are tied: count unique param sets
+    plan = layer_plan(cfgk)
+    uniq = sum(s.n for s in plan if s.kind != "shared_attn")
+    uniq += 1 if any(s.kind == "shared_attn" for s in plan) else 0
+    if cfgk.family == "encdec":
+        uniq += cfgk.n_encoder_layers
+    assert extra == (K * K + K) * uniq, (arch, K, extra, uniq)

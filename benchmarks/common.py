@@ -3,6 +3,8 @@ pipeline, timing steady-state step latency (the paper's 'actual observed
 latency, not theoretical FLOPS' methodology, scaled to this CPU host)."""
 from __future__ import annotations
 
+import json
+import os
 import statistics
 import time
 from typing import Dict, List
@@ -67,6 +69,17 @@ def measure_decode(cfg: ModelConfig, *, B: int = 4, prompt: int = 8,
     out.block_until_ready()
     dt = time.perf_counter() - t0
     return {"name": cfg.name, "decode_ms_per_token": dt / new * 1e3}
+
+
+def emit_json(payload, filename: str, outdir: str | None = None) -> str:
+    """Write a benchmark artifact (e.g. BENCH_serve.json) to the repo
+    root (default) or `outdir`; returns the path."""
+    if outdir is None:
+        outdir = os.path.join(os.path.dirname(__file__), "..")
+    path = os.path.abspath(os.path.join(outdir, filename))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
 
 
 def emit_csv(rows: List[Dict], cols: List[str]) -> None:

@@ -20,6 +20,7 @@ MODULES = [
     ("table7_selection", "Paper Table 7 (App D): block-selection ablation"),
     ("fig5_recycled", "Paper Fig 5: Recycled-AltUp"),
     ("kernel_bench", "Pallas kernel micro-bench"),
+    ("serve_bench", "Serving: static vs continuous batching"),
 ]
 
 

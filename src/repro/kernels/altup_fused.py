@@ -39,12 +39,15 @@ def _kernel(xw_ref, xt_ref, p_ref, g_ref, sel_ref, out_ref, *, K: int):
 def altup_predict_correct(x_wide: jax.Array, x_tilde: jax.Array,
                           sel: jax.Array, p: jax.Array, g: jax.Array, *,
                           block_t: int = 256, block_d: int = 512,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool | None = None) -> jax.Array:
     """x_wide: (T, K, d), x_tilde: (T, d) -> (T, K, d).
 
-    interpret=True executes the kernel body on CPU (this container);
-    on TPU pass interpret=False.
+    interpret=None auto-detects from the backend (compiled on TPU,
+    interpreted on CPU); pass a bool to force either mode.
     """
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     T, K, d = x_wide.shape
     bt = min(block_t, T)
     bd = min(block_d, d)

@@ -71,11 +71,16 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     scale: float | None = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
     """q, k, v: (BH, S, dh) — GQA head expansion happens in ops.py.
 
-    Returns (BH, S, dh). interpret=True for CPU validation.
+    Returns (BH, S, dh). interpret=None auto-detects from the backend
+    (compiled on TPU, interpreted on CPU).
     """
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     BH, S, dh = q.shape
     T = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)

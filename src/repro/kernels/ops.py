@@ -11,9 +11,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import altup_fused, flash_attention, rwkv6_scan
+from repro.kernels import (altup_fused, default_interpret, flash_attention,
+                           rwkv6_scan)
 
-_INTERPRET = jax.default_backend() != "tpu"
+_INTERPRET = default_interpret()
 
 
 @partial(jax.jit, static_argnames=("block_t", "block_d"))

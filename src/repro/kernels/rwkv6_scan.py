@@ -50,9 +50,14 @@ def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref,
         s_out_ref[0] = s.astype(s_out_ref.dtype)
 
 
-def rwkv6_wkv(r, k, v, w, u, *, chunk: int = 128, interpret: bool = True):
+def rwkv6_wkv(r, k, v, w, u, *, chunk: int = 128,
+              interpret: bool | None = None):
     """r,k,v,w: (BH, S, Dh); u: (BH, Dh). Returns (out (BH, S, Dh),
-    final state (BH, Dh, Dh))."""
+    final state (BH, Dh, Dh)). interpret=None auto-detects from the
+    backend (compiled on TPU, interpreted on CPU)."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     BH, S, Dh = r.shape
     ck = min(chunk, S)
     assert S % ck == 0

@@ -11,6 +11,15 @@ Cache kinds:
   mamba: ssm       (n, B, H, Dh, N)  + conv tail (n, B, Kw-1, Cc)
   shared_attn: k,v (B, T, Hk, Dh)      per shared-block invocation
 
+Slot-based serving: `pos` is either a scalar (uniform static batch) or a
+per-slot (B,) vector, so B sequences at different depths decode in ONE
+jitted step (continuous batching; see serve/scheduler.py). Per-slot
+attention masking falls out of the existing q_pos/k_pos machinery in
+layers.sdpa. Sliding-window segments allocate a RING cache of length
+min(T, window): writes wrap at pos % W and key positions are reconstructed
+from the write cursor, so long-context decode memory is O(window), not
+O(T), for local layers.
+
 A note on AltUp economics (paper Sec. 3.2): caches are built from the
 ACTIVE d-wide sub-block only, so the widened (K*d) stream adds ZERO bytes
 to the KV cache — decode memory is identical to the unwidened model.
@@ -44,8 +53,11 @@ def init_cache(cfg: ModelConfig, B: int, T: int,
     for si, seg in enumerate(layer_plan(cfg)):
         n = seg.n
         if seg.kind == "attn":
-            c = {"k": jnp.zeros((n, B, T, hk, dh), ad),
-                 "v": jnp.zeros((n, B, T, hk, dh), ad)}
+            # sliding-window segments need only the last `window` keys:
+            # ring buffer (wraparound handled in decode_attn)
+            Tc = min(T, seg.window) if seg.window > 0 else T
+            c = {"k": jnp.zeros((n, B, Tc, hk, dh), ad),
+                 "v": jnp.zeros((n, B, Tc, hk, dh), ad)}
         elif seg.kind == "shared_attn":
             c = {"k": jnp.zeros((B, T, hk, dh), ad),
                  "v": jnp.zeros((B, T, hk, dh), ad)}
@@ -131,17 +143,70 @@ def _nb(mesh) -> int:
     return n
 
 
-def _update_at(cache, new, pos):
-    """cache (B, T, ...), new (B, 1, ...) -> updated at position `pos`."""
-    idx = (0, pos) + (0,) * (cache.ndim - 2)
-    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), idx)
+def _update_at(cache, new, idx):
+    """cache (B, T, ...), new (B, 1, ...) -> updated at write index `idx`.
+
+    idx is a scalar (uniform batch) or a per-slot (B,) vector (continuous
+    batching: every sequence writes at its own depth)."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 0:
+        i = (0, idx) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), i)
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), idx].set(new[:, 0].astype(cache.dtype))
+
+
+def _q_pos(pos):
+    """Normalize scalar / (B,) pos to an sdpa-ready q_pos of length S=1."""
+    pos = jnp.asarray(pos)
+    return pos[None] if pos.ndim == 0 else pos[:, None]   # (1,) | (B, 1)
+
+
+def _ring_k_pos(pos, W: int):
+    """Absolute key positions held by a W-slot ring cache at depth `pos`.
+
+    Ring index i holds the latest absolute position p <= pos with
+    p % W == i, i.e. pos - ((pos - i) mod W). Never-written slots map to
+    negative positions; they are pushed to pos + 1 so the causal mask
+    kills them (their content is stale/zero)."""
+    p = _q_pos(pos)
+    if p.ndim == 1:                                       # scalar pos
+        p = p[None]                                       # (1, 1)
+    idx = jnp.arange(W)[None, :]                          # (1, W)
+    k_abs = p - ((p - idx) % W)                           # (B|1, W)
+    return jnp.where(k_abs < 0, p + 1, k_abs)
+
+
+def _decode_ffn(p_l, cfg, x):
+    """Dense-or-MoE FFN half of a decode layer (B tokens, S=1).
+
+    MoE capacity is pinned to B (drop-free): per-token routing stays
+    independent of which other requests share the batch, so continuous
+    batching is token-identical to per-request decode."""
+    h = L.rms_norm(x, p_l["ln_ffn"], cfg.logical_norm_eps)
+    if "moe" in p_l:
+        f, _ = moe_lib.moe_block(p_l["moe"], cfg.moe, h, mesh=None,
+                                 activation=cfg.ffn_activation,
+                                 capacity=h.shape[0])
+    else:
+        f = L.ffn_block(p_l["ffn"], h, cfg.ffn_activation)
+    return x + f
 
 
 def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None):
-    """One-token attention using + updating the cache slice."""
-    dh = cfg.resolved_head_dim
+    """One-token attention using + updating the cache slice.
+
+    pos: scalar or per-slot (B,). Windowed segments use a ring cache
+    (T == min(max_len, window)): writes wrap at pos % T and key positions
+    are reconstructed per slot."""
     T = cache_k.shape[1]
-    q_pos = pos[None] if pos.ndim == 0 else pos
+    # windows are static Segment.window ints; a traced window must fail
+    # loudly here — silently treating it as full attention would write
+    # past a ring-sized cache.
+    ring = int(window) > 0
+    q_pos = _q_pos(pos)
+    widx = jnp.asarray(pos) % T if ring else jnp.asarray(pos)
+    k_pos = _ring_k_pos(pos, T) if ring else jnp.arange(T)
     h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
     # project current token k, v and write to cache
     src = h
@@ -151,10 +216,10 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None):
         k_new = L.rms_norm(k_new, p_l["attn"]["k_norm"])
     if not cfg.use_rel_pos_bias:
         k_new = L.apply_rope(k_new, q_pos, cfg.rope_theta)
-    cache_k = _update_at(cache_k, k_new, pos)
-    cache_v = _update_at(cache_v, v_new, pos)
+    cache_k = _update_at(cache_k, k_new, widx)
+    cache_v = _update_at(cache_v, v_new, widx)
     a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
-                             q_pos=q_pos, k_pos=jnp.arange(T),
+                             q_pos=q_pos, k_pos=k_pos,
                              kv=(cache_k, cache_v))
     x = x + a
     if cross is not None:
@@ -165,17 +230,13 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None):
                                  q_pos=q_pos, k_pos=jnp.arange(ck.shape[1]),
                                  kv=(ck, cv), causal=False)
         x = x + c
-    h = L.rms_norm(x, p_l["ln_ffn"], cfg.logical_norm_eps)
-    if "moe" in p_l:
-        f, _ = moe_lib.moe_block(p_l["moe"], cfg.moe, h, mesh=None,
-                                 activation=cfg.ffn_activation)
-    else:
-        f = L.ffn_block(p_l["ffn"], h, cfg.ffn_activation)
-    return x + f, cache_k, cache_v
+    return _decode_ffn(p_l, cfg, x), cache_k, cache_v
 
 
 def decode_mla(p_l, cfg, x, cache_lat, pos):
-    q_pos = pos[None] if pos.ndim == 0 else pos
+    """pos: scalar or per-slot (B,). MLA caches are always linear (full
+    attention)."""
+    q_pos = _q_pos(pos)
     T = cache_lat.shape[1]
     h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
     lat_new = L.mla_latent(p_l["attn"], cfg, h, k_pos=q_pos)  # (B,1,w)
@@ -183,13 +244,7 @@ def decode_mla(p_l, cfg, x, cache_lat, pos):
     a = L.mla_attention(p_l["attn"], cfg, h, cache_lat, q_pos=q_pos,
                         k_pos=jnp.arange(T))
     x = x + a
-    h = L.rms_norm(x, p_l["ln_ffn"], cfg.logical_norm_eps)
-    if "moe" in p_l:
-        f, _ = moe_lib.moe_block(p_l["moe"], cfg.moe, h, mesh=None,
-                                 activation=cfg.ffn_activation)
-    else:
-        f = L.ffn_block(p_l["ffn"], h, cfg.ffn_activation)
-    return x + f, cache_lat
+    return _decode_ffn(p_l, cfg, x), cache_lat
 
 
 def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
@@ -267,8 +322,10 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
                 mesh=None):
     """serve_step: one new token per sequence.
 
-    tokens: (B, 1) int32; pos: scalar int32 position (uniform batch);
-    caches: from init_cache. Returns (logits (B, 1, V), new caches).
+    tokens: (B, 1) int32; pos: int32 position — scalar (uniform static
+    batch) or (B,) per-slot vector (continuous batching: each sequence
+    sits at its own depth); caches: from init_cache.
+    Returns (logits (B, 1, V), new caches).
     """
     x = embed_tokens(params, cfg, tokens)
     x = _shard(x, mesh, P(batch_axes(mesh), *([None] * (x.ndim - 1))))
@@ -288,10 +345,38 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
     return logits, new_caches
 
 
+# Recurrent cache leaves carry history that attention masking cannot
+# neutralize — they must be zeroed when a slot is recycled. Attention
+# k/v/latent leaves self-clean: a recycled slot rewrites positions
+# 0..pos sequentially and the causal mask hides everything beyond.
+_RECURRENT_LEAVES = ("wkv", "shift_tm", "shift_cm", "ssm", "conv")
+
+
+def reset_slot(caches, slot):
+    """Zero one slot's recurrent state (rwkv/mamba) across all segments.
+
+    slot: scalar int32 (traced OK — jit this with donated caches). Attn
+    and MLA caches are left untouched; per-slot position masking makes
+    their stale rows unreachable."""
+
+    def reset(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name not in _RECURRENT_LEAVES:
+            return leaf
+        # all recurrent leaves are stacked (n, B, ...): batch axis 1
+        return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))
+
+    return jax.tree_util.tree_map_with_path(reset, caches)
+
+
 def prefill(params, cfg: ModelConfig, tokens, T: int, *, mesh=None,
-            encoder_frames=None):
+            encoder_frames=None, step_fn=None):
     """Run the full prompt and build caches of capacity T (for examples
-    and correctness tests — decode_step consumes the result)."""
+    and correctness tests — decode_step consumes the result).
+
+    step_fn: optional (params, caches, tokens, pos) -> (logits, caches)
+    replacement for the eager decode_step — the serving engine passes its
+    jitted step so prefill shares the compiled hot loop."""
     B, S = tokens.shape
     caches = init_cache(cfg, B, T)
     if cfg.family == "encdec":
@@ -308,8 +393,11 @@ def prefill(params, cfg: ModelConfig, tokens, T: int, *, mesh=None,
             return k, v
         ks, vs = jax.vmap(fill)(params["enc"]["cross"])
         caches["cross"] = {"k": ks, "v": vs}
+    if step_fn is None:
+        step_fn = lambda p, c, tk, ps: decode_step(p, cfg, c, tk, ps,
+                                                   mesh=mesh)
     logits = None
     for t in range(S):
-        logits, caches = decode_step(params, cfg, caches, tokens[:, t: t + 1],
-                                     jnp.asarray(t), mesh=mesh)
+        logits, caches = step_fn(params, caches, tokens[:, t: t + 1],
+                                 jnp.asarray(t))
     return logits, caches

@@ -120,17 +120,18 @@ def moe_ffn_local(p: dict, moe: MoEConfig, x: jax.Array,
 
 
 def moe_ffn_ep(p: dict, x: jax.Array, *, moe: MoEConfig, capacity: int,
-               axis: str = "model",
+               axis: str = "model", axis_size: int = 1,
                all_axes: tuple = ("model",)) -> Tuple[jax.Array, jax.Array]:
     """Expert-parallel routed FFN — runs INSIDE shard_map.
 
     x: (n_local, d) tokens local to this shard. Experts are sharded over
-    `axis` (size M): this shard owns E_local = E/M experts; p["w*"] here are
+    `axis` (size M = axis_size, passed statically — E_local must be a
+    static int): this shard owns E_local = E/M experts; p["w*"] here are
     the local slices (E_local, ...). Communication = 2 all_to_all over axis.
     """
     n, d = x.shape
     E, k = moe.padded_experts, moe.top_k
-    M = jax.lax.axis_size(axis)
+    M = axis_size
     E_local = E // M
     # router is replicated: route against all E experts
     top_p, top_i, (f_e, P_e) = router_probs(p, moe, x)
@@ -176,12 +177,18 @@ def moe_block(p: dict, moe: MoEConfig, x: jax.Array, *,
               ep_axis: str = "model",
               batch_axes: tuple = ("data",),
               activation: str = "silu",
-              out_pin: bool = False) -> Tuple[jax.Array, jax.Array]:
+              out_pin: bool = False,
+              capacity: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
     """Full MoE FFN sub-block on (B, S, d) activations.
 
     Shared (always-on) experts run dense; routed experts go through the
     sort-based dispatch — expert-parallel over `ep_axis` when a mesh with
     that axis (size > 1) is active, single-device otherwise.
+
+    capacity: explicit per-expert capacity override (single-device path).
+    Decode passes capacity = n_tokens to make routing drop-free, so a
+    token's output never depends on which other requests share the batch
+    (the continuous-batching oracle relies on this).
     """
     B, S, d = x.shape
 
@@ -228,7 +235,7 @@ def moe_block(p: dict, moe: MoEConfig, x: jax.Array, *,
                              if a in mesh.shape)
         fn = shard_map(
             partial(moe_ffn_ep, moe=moe, capacity=cap, axis=ep_axis,
-                    all_axes=axes_in_mesh),
+                    axis_size=M, all_axes=axes_in_mesh),
             mesh=mesh,
             in_specs=(pspec, tok_spec),
             out_specs=(tok_spec, P()),
@@ -236,7 +243,7 @@ def moe_block(p: dict, moe: MoEConfig, x: jax.Array, *,
         )
         y_flat, aux = fn(local_params, flat)
     else:
-        cap = capacity_for(B * S, moe)
+        cap = capacity if capacity is not None else capacity_for(B * S, moe)
         y_flat, aux = moe_ffn_local(p, moe, flat, cap)
     out = y_shared + y_flat.reshape(B, S, d)
     if out_pin:

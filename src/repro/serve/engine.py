@@ -1,9 +1,29 @@
-"""Batched serving engine: prefill + jitted greedy/temperature decode.
+"""Serving engine: continuous batching over slot-based KV caches.
 
-The decode loop carries (caches, last_token, pos) through a jitted
-serve_step; batching is static (continuous batching is a scheduler-level
-concern left to the serving frontend — the engine exposes the batched
-step it would drive).
+Two APIs share one jitted fused step (models/decode.decode_step — the
+widened (B, 1, K, d) AltUp stream + fused predict-correct stay on the hot
+path):
+
+* submit()/step()/collect() — continuous batching. Requests are admitted
+  into cache slots by serve/scheduler.SlotScheduler; every fused step
+  advances EVERY active slot by one token at its own depth (per-slot (B,)
+  position vector). A slot in the prefill phase consumes its next prompt
+  token, a slot in the decode phase consumes its last sampled token —
+  prefill-into-slot and batched decode are the SAME jitted computation,
+  so a new request starts filling the batch the step after it arrives.
+  Finished requests (EOS or max tokens) retire immediately and their slot
+  is recycled.
+
+* generate() — legacy static batch (uniform prefill + scalar-pos decode
+  loop). Kept as the baseline the continuous path is benchmarked against
+  (benchmarks/serve_bench.py) and as the oracle it must match token-for-
+  token (tests/test_serve.py).
+
+Greedy continuous decode is token-identical to per-request generate():
+per-slot computations are row-independent (MoE decode routing is pinned
+drop-free — see models/moe.moe_block). Temperature sampling uses a
+per-request numpy Generator (seeded at submit), which intentionally does
+NOT reproduce generate()'s shared-key jax.random stream.
 """
 from __future__ import annotations
 
@@ -12,17 +32,155 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
-from repro.models.decode import decode_step, init_cache, prefill
-from repro.models.transformer import padded_vocab
+from repro.models.decode import (decode_step, init_cache, prefill,
+                                 reset_slot)
+from repro.serve.scheduler import SlotScheduler
+
+
+def _serve_step(params, caches, tokens, pos, *, cfg, mesh):
+    """Positional-arg wrapper so jit can donate the cache buffers."""
+    return decode_step(params, cfg, caches, tokens, pos, mesh=mesh)
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, max_len: int, mesh=None):
+    def __init__(self, cfg: ModelConfig, params, max_len: int, *,
+                 n_slots: int = 8, mesh=None):
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.max_len = max_len
+        self.n_slots = n_slots
         self._step = jax.jit(partial(decode_step, cfg=cfg, mesh=mesh))
+        # continuous-batching state (allocated lazily on first submit)
+        self._fused = jax.jit(partial(_serve_step, cfg=cfg, mesh=mesh),
+                              donate_argnums=(1,))
+        self._reset = jax.jit(reset_slot, donate_argnums=(0,))
+        self._sched: Optional[SlotScheduler] = None
+        self._caches = None
+        self._rngs: Dict[int, np.random.Generator] = {}
+
+    # ------------------------------------------------------------------
+    # continuous batching: submit / step / collect
+    # ------------------------------------------------------------------
+
+    def _ensure_slots(self):
+        if self._sched is not None:
+            return
+        if self.cfg.family == "encdec":
+            raise NotImplementedError(
+                "continuous batching serves decoder-only families; "
+                "use generate() for encoder-decoder models")
+        self._sched = SlotScheduler(self.n_slots, self.max_len)
+        # attention/MLA caches self-clean on recycle (per-slot position
+        # masking); only recurrent segments need a reset at admission
+        from repro.models.transformer import layer_plan
+        self._has_recurrent = any(s.kind in ("rwkv", "mamba")
+                                  for s in layer_plan(self.cfg))
+        caches = init_cache(self.cfg, self.n_slots, self.max_len)
+        if self.mesh is not None:
+            from repro.sharding import cache_shardings
+            caches = jax.device_put(
+                caches, cache_shardings(self.cfg, caches, self.mesh))
+        self._caches = caches
+
+    def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
+               eos_id: Optional[int] = None,
+               seed: Optional[int] = None) -> int:
+        """Enqueue one request. prompt: 1-D sequence of token ids.
+        Returns a request id for collect(). seed=None gives each sampled
+        request an independent RNG stream (seeded by its rid)."""
+        self._ensure_slots()
+        prompt = np.asarray(prompt).reshape(-1).tolist()
+        return self._sched.submit(prompt, max_new, temperature=temperature,
+                                  eos_id=eos_id, seed=seed)
+
+    def step(self) -> int:
+        """One fused step: admit queued requests into free slots, advance
+        every active slot by one token, retire finished requests.
+        Returns the number of slots that were active this step."""
+        if self._sched is None:
+            return 0
+        for st in self._sched.admit():
+            # recycled slots keep stale attention rows (masked out by the
+            # per-slot position), but recurrent rwkv/mamba state carries
+            # over and must be zeroed.
+            if self._has_recurrent:
+                self._caches = self._reset(self._caches, st.slot)
+        active = dict(self._sched.active)
+        if not active:
+            return 0
+        B = self.n_slots
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        samples = {}
+        for slot, st in active.items():
+            tokens[slot, 0] = st.next_token()
+            pos[slot] = st.pos
+            samples[slot] = st.samples_this_step
+        logits, self._caches = self._fused(
+            self.params, self._caches, jnp.asarray(tokens),
+            jnp.asarray(pos))
+        V = self.cfg.vocab_size
+        lg = np.asarray(logits[:, 0, :V], np.float32)
+        for slot, st in active.items():
+            st.advance()
+            if not samples[slot]:
+                continue
+            tok = self._sample_host(lg[slot], st.request)
+            st.note_token(tok)
+            if st.should_retire():
+                self._sched.retire(slot)
+                self._rngs.pop(st.request.rid, None)
+        return len(active)
+
+    def collect(self, rid: Optional[int] = None):
+        """Pop finished outputs. With rid: that request's generated token
+        list (None if not finished). Without: {rid: [tokens...]} for every
+        finished request."""
+        if self._sched is None:
+            return None if rid is not None else {}
+        if rid is not None:
+            st = self._sched.pop_finished(rid)
+            return None if st is None else list(st.generated)
+        return {r: list(st.generated)
+                for r, st in self._sched.pop_finished().items()}
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, list]:
+        """Drive step() until queue + slots drain; returns collect().
+        Raises if max_steps is exhausted with work still pending, so
+        callers never see a silently-partial result set."""
+        self._ensure_slots()
+        for _ in range(max_steps):
+            if not self._sched.has_work:
+                break
+            self.step()
+        if self._sched.has_work:
+            raise RuntimeError(
+                f"run() exhausted max_steps={max_steps} with "
+                f"{len(self._sched.active)} active and "
+                f"{self._sched.n_queued} queued requests remaining")
+        return self.collect()
+
+    @property
+    def has_work(self) -> bool:
+        return self._sched is not None and self._sched.has_work
+
+    def _sample_host(self, logits_row: np.ndarray, req) -> int:
+        """Per-request host-side sampling on a (V,) logits row."""
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        rng = self._rngs.setdefault(req.rid,
+                                    np.random.default_rng(req.seed))
+        z = logits_row / req.temperature
+        z = z - z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------------
+    # static batch (legacy baseline / oracle)
+    # ------------------------------------------------------------------
 
     def generate(self, prompt_tokens: jax.Array, n_new: int, *,
                  temperature: float = 0.0, key=None,
@@ -31,10 +189,11 @@ class Engine:
         cfg = self.cfg
         B, S = prompt_tokens.shape
         assert S + n_new <= self.max_len
-        logits, caches = prefill(self.params, cfg, prompt_tokens,
-                                 T=self.max_len, mesh=self.mesh,
-                                 encoder_frames=encoder_frames)
-        V = cfg.vocab_size
+        logits, caches = prefill(
+            self.params, cfg, prompt_tokens, T=self.max_len, mesh=self.mesh,
+            encoder_frames=encoder_frames,
+            step_fn=lambda p, c, tk, ps: self._step(p, caches=c, tokens=tk,
+                                                    pos=ps))
         outs = []
         tok = self._sample(logits[:, -1:], temperature, key, 0)
         outs.append(tok)

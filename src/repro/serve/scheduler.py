@@ -1,0 +1,161 @@
+"""Request scheduler for continuous batching.
+
+Pure host-side bookkeeping — no jax. The scheduler owns the mapping from
+requests to cache slots:
+
+  submit() -> admission queue (FIFO)
+  admit()  -> pops queued requests into free slots (in-flight batching)
+  note_token() / should_retire() -> per-request EOS / max-token tracking
+  retire() -> frees the slot for recycling
+
+The engine (serve/engine.py) drives it: one admit() before every fused
+step, one retire() per finished request after sampling. Slot recycling is
+safe without touching attention caches — a recycled slot rewrites cache
+positions 0..pos sequentially and per-slot position masking hides stale
+rows; only recurrent state (rwkv/mamba) needs an explicit reset, which
+the engine performs at admission (models/decode.reset_slot).
+
+Request lifecycle:  QUEUED -> PREFILL -> DECODE -> FINISHED
+(PREFILL and DECODE both advance one token per fused step; the phase
+boundary is where sampling starts.)
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+@dataclass
+class RequestState:
+    """One in-flight request pinned to a slot.
+
+    pos    : model position of the NEXT token to feed (== tokens consumed)
+    cursor : index into prompt of the next token to feed
+    """
+    request: Request
+    slot: int
+    pos: int = 0
+    cursor: int = 0
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.cursor < len(self.request.prompt)
+
+    def next_token(self) -> int:
+        """Token to feed at `pos` this step: prompt token during prefill,
+        last sampled token afterwards."""
+        if self.in_prefill:
+            return self.request.prompt[self.cursor]
+        return self.generated[-1]
+
+    @property
+    def samples_this_step(self) -> bool:
+        """Sampling starts at the LAST prompt token's logits."""
+        return self.cursor == len(self.request.prompt) - 1 or \
+            not self.in_prefill
+
+    def advance(self) -> None:
+        if self.in_prefill:
+            self.cursor += 1
+        self.pos += 1
+
+    def note_token(self, token: int) -> None:
+        self.generated.append(token)
+
+    def should_retire(self) -> bool:
+        r = self.request
+        if len(self.generated) >= r.max_new:
+            return True
+        return (r.eos_id is not None and self.generated
+                and self.generated[-1] == r.eos_id)
+
+
+class SlotScheduler:
+    """Admission queue + slot allocator for `n_slots` concurrent requests."""
+
+    def __init__(self, n_slots: int, max_len: int):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self._free: Deque[int] = deque(range(n_slots))
+        self._queue: Deque[Request] = deque()
+        self.active: Dict[int, RequestState] = {}     # slot -> state
+        self.finished: Dict[int, RequestState] = {}   # rid  -> state
+        self._next_rid = 0
+
+    # -- submission --------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new: int, *,
+               temperature: float = 0.0, eos_id: Optional[int] = None,
+               seed: Optional[int] = None) -> int:
+        """seed=None defaults to the request id, so concurrent sampled
+        requests get independent RNG streams; pass an explicit seed for
+        reproducibility."""
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new({max_new}) exceeds "
+                f"max_len={self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, prompt, max_new,
+                                   temperature=temperature, eos_id=eos_id,
+                                   seed=rid if seed is None else seed))
+        return rid
+
+    # -- slot allocation ---------------------------------------------------
+    def admit(self) -> List[RequestState]:
+        """Move queued requests into free slots (FIFO). Returns the newly
+        admitted states — the engine must reset their recurrent cache
+        rows before the next fused step."""
+        admitted = []
+        while self._free and self._queue:
+            slot = self._free.popleft()
+            req = self._queue.popleft()
+            st = RequestState(request=req, slot=slot)
+            self.active[slot] = st
+            admitted.append(st)
+        return admitted
+
+    def retire(self, slot: int) -> RequestState:
+        """Finish the request in `slot` and recycle the slot."""
+        st = self.active.pop(slot)
+        self.finished[st.request.rid] = st
+        self._free.append(slot)
+        return st
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.active or self._queue)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def pop_finished(self, rid: Optional[int] = None):
+        """Remove + return finished state(s): one by rid, or all."""
+        if rid is not None:
+            return self.finished.pop(rid, None)
+        out = self.finished
+        self.finished = {}
+        return out

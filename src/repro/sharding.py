@@ -105,6 +105,19 @@ def make_shardings(tree_of_specs: Any, mesh: Mesh) -> Any:
         is_leaf=lambda x: isinstance(x, P))
 
 
+def cache_shardings(cfg: ModelConfig, caches: Any, mesh: Mesh) -> Any:
+    """NamedShardings for the serving engine's slot caches.
+
+    The slot axis IS the cache batch axis, so decode.cache_pspecs'
+    batch-sharding rules apply verbatim: slots shard over ("pod","data")
+    when n_slots divides them, kv-heads (or the sequence, for the
+    long-context layout) shard over "model". Ring caches (windowed
+    segments, T == window) follow the same rules — the specs are derived
+    from leaf shapes, not from max_len."""
+    from repro.models.decode import cache_pspecs
+    return make_shardings(cache_pspecs(cfg, caches, mesh), mesh)
+
+
 def batch_pspec(mesh: Optional[Mesh]) -> P:
     if mesh is None:
         return P()

@@ -1,0 +1,58 @@
+"""Use hypothesis when installed; otherwise a minimal deterministic
+fallback so the property tests still collect and run everywhere.
+
+The fallback drives each @given test with a seeded sample loop over the
+declared strategies — far weaker than real hypothesis (no shrinking, no
+coverage-guided generation), but it preserves the property-test intent on
+hosts where `pip install hypothesis` is unavailable. Only the strategy
+surface these tests use is implemented: st.integers, st.sampled_from.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    class _Strategy:
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng):
+            return self._sample_fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        max_examples = kwargs.get("max_examples", 20)
+
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = getattr(fn, "_fallback_max_examples", 20)
+
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(n):
+                    fn(*args, *[s.sample(rng) for s in strategies],
+                       **kwargs)
+            # copy the name only — NOT the signature (functools.wraps
+            # would make pytest treat the strategy params as fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -1,0 +1,93 @@
+"""SlotScheduler unit tests: admission, retirement, slot recycling, and
+engine-level EOS handling."""
+import pytest
+
+from repro.serve.scheduler import SlotScheduler
+
+
+def test_admission_fifo_into_free_slots():
+    s = SlotScheduler(n_slots=2, max_len=32)
+    r0 = s.submit([1, 2, 3], 4)
+    r1 = s.submit([4, 5], 4)
+    r2 = s.submit([6], 4)
+    admitted = s.admit()
+    assert [st.request.rid for st in admitted] == [r0, r1]
+    assert set(s.active) == {0, 1}
+    assert s.n_queued == 1 and s.n_free == 0
+    # nothing free: second admit is a no-op
+    assert s.admit() == []
+    assert s.n_queued == 1
+    del r2
+
+
+def test_retirement_frees_and_recycles_slot():
+    s = SlotScheduler(n_slots=1, max_len=32)
+    r0 = s.submit([1, 2], 2)
+    r1 = s.submit([3], 2)
+    (st0,) = s.admit()
+    assert st0.slot == 0 and st0.request.rid == r0
+    st0.note_token(7)
+    st0.note_token(8)
+    assert st0.should_retire()
+    s.retire(0)
+    assert s.n_free == 1 and r0 in s.finished
+    # recycled: next queued request lands in the SAME slot
+    (st1,) = s.admit()
+    assert st1.slot == 0 and st1.request.rid == r1
+    assert s.has_work
+
+
+def test_prefill_decode_phase_transitions():
+    s = SlotScheduler(n_slots=1, max_len=32)
+    s.submit([10, 11, 12], 2)
+    (st,) = s.admit()
+    # feeding prompt tokens one per step; sampling starts at the LAST one
+    assert st.next_token() == 10 and not st.samples_this_step
+    st.advance()
+    assert st.next_token() == 11 and not st.samples_this_step
+    st.advance()
+    assert st.next_token() == 12 and st.samples_this_step
+    st.advance()
+    st.note_token(99)
+    assert not st.in_prefill
+    assert st.next_token() == 99 and st.samples_this_step
+    assert st.pos == 3 and not st.should_retire()
+    st.note_token(98)
+    assert st.should_retire()
+
+
+def test_eos_retires_early():
+    s = SlotScheduler(n_slots=1, max_len=32)
+    s.submit([1], 10, eos_id=42)
+    (st,) = s.admit()
+    st.note_token(5)
+    assert not st.should_retire()
+    st.note_token(42)
+    assert st.should_retire()
+
+
+def test_submit_validation():
+    s = SlotScheduler(n_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        s.submit([], 2)                    # empty prompt
+    with pytest.raises(ValueError):
+        s.submit([1, 2], 0)                # no tokens requested
+    with pytest.raises(ValueError):
+        s.submit([1, 2, 3, 4, 5], 4)       # 5 + 4 > max_len
+    s.submit([1, 2, 3, 4], 4)              # == max_len is fine
+
+
+def test_pop_finished_single_and_bulk():
+    s = SlotScheduler(n_slots=2, max_len=16)
+    ra = s.submit([1], 1)
+    rb = s.submit([2], 1)
+    s.admit()
+    for slot in list(s.active):
+        s.active[slot].note_token(0)
+        s.retire(slot)
+    got = s.pop_finished(ra)
+    assert got.request.rid == ra
+    assert s.pop_finished(ra) is None      # popped
+    rest = s.pop_finished()
+    assert set(rest) == {rb}
+    assert s.pop_finished() == {}

@@ -3,7 +3,7 @@ and the assignment's skip rules are exactly as documented."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.config import ALL_SHAPES, SHAPES_BY_NAME
 from repro.configs import (ARCH_IDS, get_config, input_specs,

@@ -2,8 +2,15 @@
 pure-jnp oracle, plus the HBM-bytes model that motivates the fusion (the
 fused AltUp kernel's claim is 1 read + 1 write of the (T, K, d) stream).
 us_per_call on CPU is NOT a TPU number — the derived column reports the
-bytes-roofline the kernel is designed to hit."""
+bytes-roofline the kernel is designed to hit.
+
+Also emits BENCH_decode.json: the decode-attention microbench comparing
+the dense O(T) cache read against the length-aware serving path (kv-len
+bucket slice on CPU; the ragged Pallas kernel additionally skips per-slot
+blocks on TPU) across cache fill fractions — tokens/s measured, KV
+bytes/token from roofline.analysis.decode_kv_bytes."""
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +25,80 @@ def _time(f, *args, n=5):
         out = f(*args)
         jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
     return (time.perf_counter() - t0) / n * 1e6
+
+
+def decode_attn_bench(B: int = 8, T: int = 1024, Hk: int = 4, rep: int = 2,
+                      dh: int = 64, n_layers: int = 4):
+    """Decode-attention cost vs slot fill depth: dense full-cache read vs
+    the length-aware path the serving engine actually dispatches to on
+    this backend (static kv-len bucket slice; on TPU the ragged kernel
+    also skips blocks per slot INSIDE the bucket). Writes
+    BENCH_decode.json."""
+    from repro.config import ModelConfig
+    from repro.models.layers import sdpa
+    from repro.roofline.analysis import decode_kv_bytes
+
+    H = Hk * rep
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh))
+    k = jax.random.normal(ks[1], (B, T, Hk, dh))
+    v = jax.random.normal(ks[2], (B, T, Hk, dh))
+    cfg = ModelConfig(name="decode-bench", n_layers=n_layers, d_model=H * dh,
+                      n_heads=H, n_kv_heads=Hk, head_dim=dh)
+
+    @jax.jit
+    def dense(q, k, v, q_pos):
+        return sdpa(q, k, v, causal=True, window=None, q_pos=q_pos,
+                    k_pos=jnp.arange(k.shape[1]))
+
+    @partial(jax.jit, static_argnames=("bucket",))
+    def ragged(q, k, v, q_pos, *, bucket):
+        return sdpa(q, k[:, :bucket], v[:, :bucket], causal=True,
+                    window=None, q_pos=q_pos, k_pos=jnp.arange(bucket))
+
+    from repro.serve.engine import kv_bucket  # the engine's exact policy
+
+    rows = []
+    for frac in (1 / 16, 1 / 8, 1 / 4, 1 / 2, 1.0):
+        fill = max(int(T * frac), 1)
+        lengths = jnp.full((B,), fill, jnp.int32)
+        q_pos = (lengths - 1)[:, None]
+        bucket = kv_bucket(fill, 32, T)
+        us_d = _time(dense, q, k, v, q_pos)
+        us_r = _time(partial(ragged, bucket=bucket), q, k, v, q_pos)
+        bpt_d = decode_kv_bytes(cfg, lengths, T=T, ragged=False) / B
+        bpt_r = decode_kv_bytes(cfg, lengths, T=T, ragged=True) / B
+        rows.append({
+            "fill_frac": frac, "fill": fill, "kv_bucket": bucket,
+            "us_per_step_dense": us_d, "us_per_step_ragged": us_r,
+            "tokens_per_s_dense": B / (us_d * 1e-6),
+            "tokens_per_s_ragged": B / (us_r * 1e-6),
+            "speedup": us_d / us_r,
+            "kv_bytes_per_token_dense": bpt_d,
+            "kv_bytes_per_token_ragged": bpt_r,
+        })
+    # the Pallas kernel itself (interpret-mode on CPU: a correctness
+    # artifact, not a speed number; compiled on TPU)
+    lengths = jnp.full((B,), max(T // 4, 1), jnp.int32)
+    kernel_us = _time(partial(ops.ragged_decode_attn, block_k=128),
+                      q, k, v, lengths)
+    payload = {
+        "shape": {"B": B, "T": T, "Hk": Hk, "rep": rep, "dh": dh,
+                  "n_layers": n_layers},
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "ragged_kernel_us_per_step": kernel_us,
+        "ragged_kernel_mode": ("compiled"
+                               if jax.default_backend() == "tpu"
+                               else "interpret"),
+    }
+    from benchmarks.common import emit_json
+    path = emit_json(payload, "BENCH_decode.json")
+    qtr = rows[2]
+    print(f"# wrote {path} (at 25% fill: {qtr['speedup']:.2f}x tokens/s "
+          f"vs dense, {qtr['kv_bytes_per_token_dense'] / max(qtr['kv_bytes_per_token_ragged'], 1):.1f}x fewer KV bytes)")
+    return rows
 
 
 def run():
@@ -47,7 +128,18 @@ def run():
                  "us_per_call": _time(lambda *a: ops.mha_flash(
                      *a, block_q=128, block_k=128), q, kk, vv),
                  "derived": f"vmem_tiles={S//128}x{S//128}"})
+    for r in decode_attn_bench():
+        rows.append({"name": f"decode_attn(fill={r['fill_frac']:.3g})",
+                     "us_per_call": r["us_per_step_ragged"],
+                     "derived": (f"dense={r['us_per_step_dense']:.0f}us "
+                                 f"speedup={r['speedup']:.2f}x "
+                                 f"kvB/tok={r['kv_bytes_per_token_ragged']:.0f}")})
     return rows
 
 
 COLS = ["name", "us_per_call", "derived"]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit_csv
+    emit_csv(run(), COLS)

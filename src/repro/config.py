@@ -152,6 +152,13 @@ class ModelConfig:
     moe_out_pin: bool = False
     # pin MLA absorbed-path intermediates (q_c/out_c) to head-sharded
     mla_attn_pins: bool = False
+    # decode kernel suite (serving hot path). Tri-state: None = auto
+    # (kernel on TPU, dense jnp fallback on interpret backends),
+    # True/False = force — see kernels.resolve_kernel_flag.
+    # Pallas length-aware S=1 GQA decode attention over slot caches:
+    ragged_decode_attn: Optional[bool] = None
+    # fused predict+correct Pallas kernel inside the decode layer loop:
+    fused_decode_altup: Optional[bool] = None
 
     def __post_init__(self):
         assert self.family in (

@@ -77,13 +77,17 @@ def altup_layer(layer_fn: Callable[[jax.Array], jax.Array],
     sel      : one-hot (K,) active-block selector
     p, g     : (K, K), (K,) trainable scalars for this layer
     """
-    x_hat = predict(x_wide, p)
     x_active = select_block(x_wide, sel)
     x_tilde = layer_fn(x_active)
     if use_fused:
-        # the fused Pallas path recomputes predict+correct in one VMEM pass
+        # the fused Pallas path computes predict+correct in one VMEM pass
+        # (decode batches route through the small-block decode wrapper)
         from repro.kernels import ops as kops
+        if x_wide.ndim == 4:
+            return kops.decode_altup_predict_correct(x_wide, x_tilde,
+                                                     sel, p, g)
         return kops.altup_predict_correct(x_wide, x_tilde, sel, p, g)
+    x_hat = predict(x_wide, p)
     return correct(x_hat, x_tilde, sel, g)
 
 

@@ -10,3 +10,19 @@ def default_interpret() -> bool:
     interpret=None and resolve it here at call time, so the same code
     path runs on both backends without flags."""
     return jax.default_backend() != "tpu"
+
+
+def resolve_kernel_flag(flag) -> bool:
+    """Dispatch rule for the tri-state kernel perf levers on ModelConfig
+    (ragged_decode_attn, fused_decode_altup):
+
+      None  -> auto: the kernel runs where it compiles (TPU); interpret
+               backends (CPU CI) take the dense jnp path, which is the
+               kernels' allclose oracle anyway.
+      True  -> force the kernel (interpret mode off-TPU — used by the
+               oracle/serving tests to exercise the kernel path on CPU).
+      False -> force the dense fallback everywhere.
+    """
+    if flag is None:
+        return not default_interpret()
+    return bool(flag)

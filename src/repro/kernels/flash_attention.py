@@ -8,9 +8,14 @@ accumulator live in VMEM scratch across the kv-block grid dimension
 revisiting the same output block, rather than a CUDA-style inner loop).
 
 Supports causal masking and sliding windows (gemma-style local layers).
-Causal block skipping is expressed through masking here; on real TPU the
-kv axis would use a per-q-block upper bound via index remapping — noted
-in EXPERIMENTS §Perf.
+Fully-masked kv blocks are SKIPPED, not computed-and-masked: for a causal
+grid, kv blocks strictly above the diagonal, and for a sliding window,
+kv blocks entirely older than `window`, (a) predicate their compute off
+with `pl.when` and (b) remap their k/v block fetch to the q-block's
+diagonal block through the index map — the TPU pipeline emitter elides
+copies whose block indices did not change, so skipped blocks cost neither
+FLOPs nor HBM reads. Outputs are identical to the masked full grid
+(tested in tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -25,6 +30,23 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _block_skipped(qi, ki, *, causal: bool, window: int,
+                   block_q: int, block_k: int):
+    """True when kv block ki is FULLY masked for q block qi. Shared by the
+    kernel's compute predicate and the index-map fetch clamp so the two
+    can never disagree."""
+    q_lo = qi * block_q
+    q_hi = q_lo + block_q - 1
+    k_lo = ki * block_k
+    k_hi = k_lo + block_k - 1
+    skip = jnp.zeros((), jnp.bool_)
+    if causal:
+        skip = skip | (k_lo > q_hi)          # strictly above the diagonal
+    if window > 0:
+        skip = skip | (q_lo - k_hi >= window)  # entirely older than window
+    return skip
+
+
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                scale: float, causal: bool, window: int,
                block_q: int, block_k: int, nk: int):
@@ -37,30 +59,36 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0].astype(jnp.float32)              # (bq, dh)
-    k = k_ref[0].astype(jnp.float32)              # (bk, dh)
-    v = v_ref[0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                    (block_q, block_k), 0)
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
-                                                    (block_q, block_k), 1)
-    mask = jnp.ones_like(s, dtype=jnp.bool_)
-    if causal:
-        mask = mask & (q_pos >= k_pos)
-    if window > 0:
-        mask = mask & (q_pos - k_pos < window)
-    s = jnp.where(mask, s, NEG_INF)
-    m_prev = m_scr[...]                           # (bq, 1)
-    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))
-    alpha = jnp.exp(m_prev[:, 0] - m_new)
-    pexp = jnp.exp(s - m_new[:, None])
-    pexp = jnp.where(mask, pexp, 0.0)
-    l_new = alpha * l_scr[:, 0] + pexp.sum(axis=-1)
-    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot(pexp, v)
-    m_scr[...] = m_new[:, None]
-    l_scr[...] = l_new[:, None]
-    acc_scr[...] = acc
+    run = jnp.logical_not(_block_skipped(qi, ki, causal=causal,
+                                         window=window, block_q=block_q,
+                                         block_k=block_k))
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)          # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (q_pos >= k_pos)
+        if window > 0:
+            mask = mask & (q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                       # (bq, 1)
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))
+        alpha = jnp.exp(m_prev[:, 0] - m_new)
+        pexp = jnp.exp(s - m_new[:, None])
+        pexp = jnp.where(mask, pexp, 0.0)
+        l_new = alpha * l_scr[:, 0] + pexp.sum(axis=-1)
+        acc = acc_scr[...] * alpha[:, None] + jax.lax.dot(pexp, v)
+        m_scr[...] = m_new[:, None]
+        l_scr[...] = l_new[:, None]
+        acc_scr[...] = acc
 
     @pl.when(ki == nk - 1)
     def _finish():
@@ -90,13 +118,23 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     nq, nk = S // bq, T // bk
     kern = functools.partial(_fa_kernel, scale=scale, causal=causal,
                              window=window, block_q=bq, block_k=bk, nk=nk)
+
+    def kv_map(b, i, j):
+        # remap skipped blocks' fetch to q-block i's diagonal kv block
+        # (always unskipped): the repeated index elides the copy on TPU
+        if not (causal or window > 0):
+            return (b, j, 0)
+        skip = _block_skipped(i, j, causal=causal, window=window,
+                              block_q=bq, block_k=bk)
+        return (b, jnp.where(skip, (i * bq) // bk, j), 0)
+
     return pl.pallas_call(
         kern,
         grid=(BH, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), kv_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
         ],
         out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import (altup_fused, default_interpret, flash_attention,
+                           ragged_decode_attention as ragged_mod,
                            rwkv6_scan)
 
 _INTERPRET = default_interpret()
@@ -37,6 +38,40 @@ def altup_predict_correct(x_wide, x_tilde, sel, p, g, *, block_t=256,
         x_wide.reshape(T, K, d), x_tilde.reshape(T, d), sel, p, g,
         block_t=bt, block_d=bd, interpret=_INTERPRET)
     return out.reshape(*lead, K, d)
+
+
+def decode_altup_predict_correct(x_wide, x_tilde, sel, p, g):
+    """Batched single-token AltUp predict+correct for the decode loop.
+
+    x_wide: (B, S, K, d) widened stream (S is 1 for decode ticks, the
+    chunk size during chunked prefill); x_tilde: (B, S, d). One fused
+    VMEM pass instead of the 2-3 separate HBM passes the unfused
+    predict/correct einsums make per decode step. Decode batches are
+    small, so blocks are sized for the flattened B*S token axis.
+    """
+    B = x_wide.shape[0] * x_wide.shape[1]
+    return altup_predict_correct(x_wide, x_tilde, sel, p, g,
+                                 block_t=min(64, B), block_d=512)
+
+
+@partial(jax.jit, static_argnames=("block_k",))
+def ragged_decode_attn(q, k, v, lengths, *, block_k=128):
+    """Length-aware S=1 GQA decode attention over slot caches.
+
+    q: (B, 1, H, dh) single-token queries; k, v: (B, T, Hk, dh) slot
+    caches; lengths: (B,) per-slot valid-row counts. Heads are grouped
+    (B, Hk, rep, dh) — matching sdpa's GQA layout — so each cache row is
+    read once per kv head, not once per query head. Returns (B, 1, H, dh).
+    """
+    B, S, H, dh = q.shape
+    assert S == 1, "ragged decode kernel is single-token (S=1) only"
+    Hk = k.shape[2]
+    rep = H // Hk
+    qg = q[:, 0].reshape(B, Hk, rep, dh)
+    o = ragged_mod.ragged_decode_attention(qg, k, v, lengths,
+                                           block_k=block_k,
+                                           interpret=_INTERPRET)
+    return o.reshape(B, 1, H, dh)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))

@@ -1,0 +1,133 @@
+"""Length-aware S=1 GQA decode attention over slot caches (Pallas TPU).
+
+Decode is memory-bandwidth-bound on the KV-cache read (Pope et al. 2022):
+the dense path scores every query against the ENTIRE allocated cache
+(B, T, Hk, Dh) and masks, so a slot 40 tokens deep still pays for all T
+cache rows every step. This kernel takes per-slot fill depths `lengths`
+(B,) and visits kv blocks only up to ceil(len_b / block_k) per slot:
+
+* the kv-block grid axis is clamped through a scalar-prefetch index map
+  (`PrefetchScalarGridSpec`), so blocks past a slot's fill depth re-map to
+  the slot's last valid block — the TPU pipeline emitter elides copies
+  whose indices did not change, giving ZERO HBM reads past the fill depth;
+* compute for those blocks is predicated off with `pl.when`, so the
+  online-softmax accumulators only ever see real rows;
+* the GQA head-group expansion is fused: queries arrive grouped
+  (B, Hk, rep, Dh) and each kv block is read ONCE per kv head and scored
+  against all `rep` grouped queries (a (rep, block_k) MXU matmul), instead
+  of materializing rep copies of k/v like the dense jnp path.
+
+Ring-buffer sliding-window caches need NO host-side roll and no in-kernel
+position remap: attention is permutation-invariant over the key set once
+masking is decided, and a W-slot ring at depth pos holds exactly the last
+min(pos+1, W) positions in rows {i : i < min(pos+1, W)} — i.e. the
+wraparound index remap collapses to the same `row < length` predicate as
+the linear cache (callers pass lengths = min(pos+1, W)). See
+docs/kernels.md for the bytes model.
+
+Empty slots (length 0) produce exact zeros (the engine ignores their
+logits); boundary blocks of a T % block_k != 0 cache are handled by
+masking the padded rows out of both the scores and the value read.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_k: int, nk: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+
+    @pl.when(j * block_k < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (rep, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bk, dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (bk, dh)
+        # one kv read serves all `rep` grouped queries (fused GQA)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < length
+        s = jnp.where(mask, s, NEG_INF)
+        # boundary blocks (T % block_k != 0) carry undefined padded rows;
+        # zero them so 0-weight rows cannot poison the accumulator
+        rowmask = (j * block_k
+                   + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)) < length
+        v = jnp.where(rowmask, v, 0.0)
+        m_prev = m_scr[...]                            # (rep, 1)
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))
+        alpha = jnp.exp(m_prev[:, 0] - m_new)
+        pexp = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_scr[:, 0] = alpha * l_scr[:, 0] + pexp.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(pexp, v)
+        m_scr[:, 0] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def ragged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, *,
+                            scale: float | None = None, block_k: int = 128,
+                            interpret: bool | None = None) -> jax.Array:
+    """q: (B, Hk, rep, Dh) grouped queries; k, v: (B, T, Hk, Dh) slot
+    caches; lengths: (B,) int32 valid-row counts (<= T). Returns
+    (B, Hk, rep, Dh). interpret=None auto-detects from the backend
+    (compiled on TPU, interpreted on CPU)."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
+    B, Hk, rep, dh = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    bk = min(block_k, T)
+    nk = pl.cdiv(T, bk)
+    lengths = lengths.astype(jnp.int32)
+
+    def kv_map(b, h, j, lens):
+        # clamp to the slot's last needed block: past-fill grid steps
+        # re-fetch an already-resident block (elided copy -> no HBM read)
+        last = jnp.maximum(pl.cdiv(lens[b], bk) - 1, 0)
+        return (b, jnp.minimum(j, last), h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hk, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, dh), lambda b, h, j, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, dh), kv_map),
+            pl.BlockSpec((1, bk, 1, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, dh),
+                               lambda b, h, j, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, dh), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, scale=scale, block_k=bk, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rep, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -38,6 +38,27 @@ def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def ragged_decode_ref(q, k, v, lengths, *, scale=None):
+    """Dense-masked oracle for the ragged decode kernel.
+
+    q: (B, Hk, rep, Dh) grouped single-token queries; k, v: (B, T, Hk, Dh)
+    slot caches; lengths: (B,) valid-row counts. Scores the FULL cache and
+    masks rows >= length — exactly the O(T) read the kernel avoids.
+    Empty slots (length 0) return zeros, matching the kernel.
+    """
+    B, Hk, rep, dh = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bhrd,bthd->bhrt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(T)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)              # all-masked rows -> exact 0
+    out = jnp.einsum("bhrt,bthd->bhrd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def rwkv6_wkv_ref(r, k, v, w, u):
     """r,k,v,w: (BH, S, Dh); u: (BH, Dh)."""
     f32 = jnp.float32

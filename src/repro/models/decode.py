@@ -20,6 +20,15 @@ min(T, window): writes wrap at pos % W and key positions are reconstructed
 from the write cursor, so long-context decode memory is O(window), not
 O(T), for local layers.
 
+Decode hot path (see docs/kernels.md): steps may carry S > 1 tokens per
+slot (chunked prefill; padded tokens suppressed via `n_valid` through
+out-of-bounds-dropped cache writes), cache READS are sliced to the static
+`kv_len` bucket the engine derives from the deepest active slot (O(len)
+bytes, not O(T)), and on TPU S=1 attention routes through the ragged
+Pallas decode kernel (kernels/ragged_decode_attention.py) with the fused
+AltUp predict/correct kernel in the layer loop — both with dense jnp
+fallbacks that are their test oracles.
+
 A note on AltUp economics (paper Sec. 3.2): caches are built from the
 ACTIVE d-wide sub-block only, so the widened (K*d) stream adds ZERO bytes
 to the KV cache — decode memory is identical to the unwidened model.
@@ -144,16 +153,22 @@ def _nb(mesh) -> int:
 
 
 def _update_at(cache, new, idx):
-    """cache (B, T, ...), new (B, 1, ...) -> updated at write index `idx`.
+    """cache (B, T, ...), new (B, S, ...) -> updated at write rows `idx`.
 
-    idx is a scalar (uniform batch) or a per-slot (B,) vector (continuous
-    batching: every sequence writes at its own depth)."""
+    idx is a scalar (uniform batch: S contiguous rows starting there), or
+    a per-slot (B|1, S) row matrix (continuous batching: every sequence
+    writes at its own depth, ring rows pre-wrapped). Row indices >= T are
+    DROPPED — chunked prefill uses this to suppress the writes of padded
+    tokens past a slot's valid count."""
     idx = jnp.asarray(idx)
     if idx.ndim == 0:
         i = (0, idx) + (0,) * (cache.ndim - 2)
         return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), i)
     B = cache.shape[0]
-    return cache.at[jnp.arange(B), idx].set(new[:, 0].astype(cache.dtype))
+    if idx.shape[0] == 1 and B > 1:
+        idx = jnp.broadcast_to(idx, (B,) + idx.shape[1:])
+    return cache.at[jnp.arange(B)[:, None], idx].set(
+        new.astype(cache.dtype), mode="drop")
 
 
 def _q_pos(pos):
@@ -177,36 +192,99 @@ def _ring_k_pos(pos, W: int):
     return jnp.where(k_abs < 0, p + 1, k_abs)
 
 
-def _decode_ffn(p_l, cfg, x):
-    """Dense-or-MoE FFN half of a decode layer (B tokens, S=1).
+def _bucketed(T: int, kv_len) -> int:
+    """Static read-slice length: the engine's kv-len bucket clamped to the
+    cache capacity. None = no bucketing (read the whole cache)."""
+    return T if kv_len is None else min(int(kv_len), T)
 
-    MoE capacity is pinned to B (drop-free): per-token routing stays
-    independent of which other requests share the batch, so continuous
-    batching is token-identical to per-request decode."""
+
+def decode_positions(pos, S: int, Tc: int, ring: bool, *, n_valid=None,
+                     kv_len=None):
+    """Hoisted per-segment position/index construction (§Perf satellite).
+
+    Built ONCE per segment — OUTSIDE the scanned layer body — so the
+    q_pos/k_pos/write-row machinery is loop-invariant across the
+    segment's layers instead of being re-derived per layer per step, and
+    the single `widx` is shared by the k and v cache writes.
+
+      q_pos   (B|1, S)  absolute query positions pos + i
+      widx    scalar | (B|1, S) cache write rows (ring-wrapped); padded
+              tokens (i >= n_valid) remap to Tc -> dropped by _update_at
+      k_pos   (Tb,) | (B|1, Tb) absolute key positions of the read slice
+      lengths (B?,) valid cache rows after this step's writes (the ragged
+              kernel's per-slot fill depths; ring windows collapse to the
+              same `row < length` rule — see kernels/ragged_decode_attention)
+      Tb      static read-slice length (kv-len bucket clamped to Tc)
+    """
+    pos = jnp.asarray(pos)
+    Tb = _bucketed(Tc, kv_len)
+    offs = jnp.arange(S)
+    scalar = pos.ndim == 0
+    assert not (scalar and n_valid is not None), \
+        "per-slot n_valid requires a per-slot (B,) pos"
+    p = pos[None] if scalar else pos                      # (1,) | (B,)
+    n = jnp.full(p.shape, S, jnp.int32) if n_valid is None \
+        else n_valid.astype(jnp.int32)
+    q_pos = p[:, None] + offs[None]                       # (B|1, S)
+    lengths = jnp.minimum(p + n, Tc).astype(jnp.int32)    # (B|1,)
+    if ring:
+        # ring rows wrap at Tc; ragged masking needs no wraparound remap
+        # (a depth-p ring holds exactly rows < min(p+1, Tc) valid), only
+        # the dense-fallback k_pos reconstruction does
+        widx = q_pos % Tc
+        if scalar and S == 1:
+            widx = widx[0, 0]                             # dus fast path
+        k_pos = _ring_k_pos(p + n - 1, Tc)[:, :Tb]
+    else:
+        # scalar uniform pos writes S contiguous rows -> fast dus path
+        widx = pos if scalar else q_pos
+        k_pos = jnp.arange(Tb)
+    if n_valid is not None:
+        # padded chunk tokens (i >= n_valid) write to row Tc -> dropped
+        widx = jnp.where(offs[None] < n[:, None], widx, Tc)
+    return {"q_pos": q_pos, "widx": widx, "k_pos": k_pos,
+            "lengths": lengths, "Tb": Tb}
+
+
+def _decode_ffn(p_l, cfg, x):
+    """Dense-or-MoE FFN half of a decode layer (B*S tokens; S=1 decode
+    ticks, S=chunk during chunked prefill).
+
+    MoE capacity is pinned to the step's token count (drop-free):
+    per-token routing stays independent of which other requests share the
+    batch, so continuous batching is token-identical to per-request
+    decode and padded chunk tokens cannot evict real ones."""
     h = L.rms_norm(x, p_l["ln_ffn"], cfg.logical_norm_eps)
     if "moe" in p_l:
         f, _ = moe_lib.moe_block(p_l["moe"], cfg.moe, h, mesh=None,
                                  activation=cfg.ffn_activation,
-                                 capacity=h.shape[0])
+                                 capacity=h.shape[0] * h.shape[1])
     else:
         f = L.ffn_block(p_l["ffn"], h, cfg.ffn_activation)
     return x + f
 
 
-def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None):
-    """One-token attention using + updating the cache slice.
+def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
+                pinfo=None, n_valid=None, kv_len=None, use_ragged=False):
+    """Single-step attention using + updating the cache slice.
 
-    pos: scalar or per-slot (B,). Windowed segments use a ring cache
-    (T == min(max_len, window)): writes wrap at pos % T and key positions
-    are reconstructed per slot."""
+    x: (B, S, d) — S is 1 for decode ticks, the chunk size during chunked
+    prefill (padded tokens suppressed via n_valid). pos: scalar or
+    per-slot (B,). Windowed segments use a ring cache (T == min(max_len,
+    window)): writes wrap at pos % T and key positions are reconstructed
+    per slot. pinfo: hoisted decode_positions dict (decode_segment builds
+    it once per segment); kv_len: static read-slice bucket; use_ragged:
+    route S=1 attention through the length-aware Pallas kernel."""
     T = cache_k.shape[1]
     # windows are static Segment.window ints; a traced window must fail
     # loudly here — silently treating it as full attention would write
     # past a ring-sized cache.
     ring = int(window) > 0
-    q_pos = _q_pos(pos)
-    widx = jnp.asarray(pos) % T if ring else jnp.asarray(pos)
-    k_pos = _ring_k_pos(pos, T) if ring else jnp.arange(T)
+    if pinfo is None:
+        pinfo = decode_positions(pos, x.shape[1], T, ring, n_valid=n_valid,
+                                 kv_len=kv_len)
+    q_pos, widx, k_pos, Tb = (pinfo["q_pos"], pinfo["widx"], pinfo["k_pos"],
+                              pinfo["Tb"])
     h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
     # project current token k, v and write to cache
     src = h
@@ -218,9 +296,15 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None):
         k_new = L.apply_rope(k_new, q_pos, cfg.rope_theta)
     cache_k = _update_at(cache_k, k_new, widx)
     cache_v = _update_at(cache_v, v_new, widx)
+    # read slice: O(bucket) bytes, not O(T) — rows past the kv-len bucket
+    # are allocated-but-unwritten (masked anyway) and never touched
+    kr = cache_k[:, :Tb] if Tb < T else cache_k
+    vr = cache_v[:, :Tb] if Tb < T else cache_v
+    lengths = jnp.broadcast_to(pinfo["lengths"], (x.shape[0],)) \
+        if use_ragged else None
     a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
                              q_pos=q_pos, k_pos=k_pos,
-                             kv=(cache_k, cache_v))
+                             kv=(kr, vr), ragged_lengths=lengths)
     x = x + a
     if cross is not None:
         cp, ck, cv = cross
@@ -233,34 +317,60 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None):
     return _decode_ffn(p_l, cfg, x), cache_k, cache_v
 
 
-def decode_mla(p_l, cfg, x, cache_lat, pos):
+def decode_mla(p_l, cfg, x, cache_lat, pos, pinfo=None, n_valid=None,
+               kv_len=None):
     """pos: scalar or per-slot (B,). MLA caches are always linear (full
-    attention)."""
-    q_pos = _q_pos(pos)
+    attention); the latent read is bucket-sliced like the k/v caches."""
     T = cache_lat.shape[1]
+    if pinfo is None:
+        pinfo = decode_positions(pos, x.shape[1], T, False, n_valid=n_valid,
+                                 kv_len=kv_len)
+    q_pos, widx, Tb = pinfo["q_pos"], pinfo["widx"], pinfo["Tb"]
     h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
-    lat_new = L.mla_latent(p_l["attn"], cfg, h, k_pos=q_pos)  # (B,1,w)
-    cache_lat = _update_at(cache_lat, lat_new, pos)
-    a = L.mla_attention(p_l["attn"], cfg, h, cache_lat, q_pos=q_pos,
-                        k_pos=jnp.arange(T))
+    lat_new = L.mla_latent(p_l["attn"], cfg, h, k_pos=q_pos)  # (B,S,w)
+    cache_lat = _update_at(cache_lat, lat_new, widx)
+    latr = cache_lat[:, :Tb] if Tb < T else cache_lat
+    a = L.mla_attention(p_l["attn"], cfg, h, latr, q_pos=q_pos,
+                        k_pos=pinfo["k_pos"])
     x = x + a
     return _decode_ffn(p_l, cfg, x), cache_lat
 
 
 def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
-                   *, mesh=None, cross_stack=None):
-    """x: (B, 1, [K,] d); returns (x, new cache)."""
+                   *, mesh=None, cross_stack=None, n_valid=None,
+                   kv_len=None, use_ragged=False, use_fused=False):
+    """x: (B, S, [K,] d); returns (x, new cache). S > 1 only during
+    chunked prefill (attention/MLA segments; padded tokens masked via
+    n_valid)."""
     K = cfg.altup.K
+    S = x.shape[1]
+    # hoisted position construction (§Perf satellite): q_pos / k_pos /
+    # write rows / ragged lengths are identical for every layer of the
+    # segment, so build them once HERE — outside the scanned layer body —
+    # instead of re-deriving the (S, T) position grids per layer per step.
+    if seg.kind in ("attn", "shared_attn"):
+        Tc = (cache["k"].shape[1] if seg.kind == "shared_attn"
+              else cache["k"].shape[2])
+        pinfo = decode_positions(pos, S, Tc, int(seg.window) > 0,
+                                 n_valid=n_valid, kv_len=kv_len)
+    elif seg.kind == "mla":
+        Tc = cache["latent"].shape[2]
+        pinfo = decode_positions(pos, S, Tc, False, n_valid=n_valid,
+                                 kv_len=kv_len)
+    else:
+        pinfo = None
+
     if seg.kind == "shared_attn":
         def layer_fn(xa):
             out, ck, cv = decode_attn(p_seg, cfg, xa, cache["k"], cache["v"],
-                                      pos, seg.window)
+                                      pos, seg.window, pinfo=pinfo,
+                                      use_ragged=use_ragged)
             layer_fn.new_cache = {"k": ck, "v": cv}
             return out
         if cfg.altup.enabled:
             sel = alt.block_selector(seg.layer_offset, K, cfg.altup.selection)
             x = alt.altup_layer(layer_fn, x, sel, p_seg["altup_p"],
-                                p_seg["altup_g"])
+                                p_seg["altup_g"], use_fused=use_fused)
         else:
             x = layer_fn(x)
         return x, layer_fn.new_cache
@@ -283,10 +393,12 @@ def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
                     cross = (cross_l[0], cross_l[1]["k"], cross_l[1]["v"])
                 out, ck, cv = decode_attn(p_l, cfg, xa, cache_l["k"],
                                           cache_l["v"], pos, window,
-                                          cross=cross)
+                                          cross=cross, pinfo=pinfo,
+                                          use_ragged=use_ragged)
                 box["cache"] = {"k": ck, "v": cv}
             elif seg.kind == "mla":
-                out, lat = decode_mla(p_l, cfg, xa, cache_l["latent"], pos)
+                out, lat = decode_mla(p_l, cfg, xa, cache_l["latent"], pos,
+                                      pinfo=pinfo)
                 box["cache"] = {"latent": lat}
             elif seg.kind == "rwkv":
                 state = {"wkv": cache_l["wkv"],
@@ -308,7 +420,7 @@ def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
 
         if cfg.altup.enabled:
             x = alt.altup_layer(layer_fn, x, sel, p_l["altup_p"],
-                                p_l["altup_g"])
+                                p_l["altup_g"], use_fused=use_fused)
         else:
             x = layer_fn(x)
         return x, box["cache"]
@@ -319,14 +431,24 @@ def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
 
 
 def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
-                mesh=None):
-    """serve_step: one new token per sequence.
+                n_valid=None, kv_len=None, mesh=None):
+    """serve_step: advance every sequence by its next token(s).
 
-    tokens: (B, 1) int32; pos: int32 position — scalar (uniform static
-    batch) or (B,) per-slot vector (continuous batching: each sequence
-    sits at its own depth); caches: from init_cache.
-    Returns (logits (B, 1, V), new caches).
+    tokens: (B, S) int32 — S is 1 for decode ticks; chunked prefill feeds
+    S = chunk tokens per slot (padded slots masked by n_valid). pos:
+    int32 position — scalar (uniform static batch) or (B,) per-slot
+    vector (continuous batching: each sequence sits at its own depth).
+    n_valid: optional (B,) count of real tokens per slot this step —
+    padded tokens neither write the cache nor produce usable logits.
+    kv_len: optional STATIC read-slice bucket (host-computed power-of-two
+    >= max fill depth): attention reads O(kv_len) cache rows, not O(T).
+    Returns (logits (B, S, V), new caches); sampling reads row
+    n_valid-1 per slot.
     """
+    from repro.kernels import resolve_kernel_flag
+    use_ragged = resolve_kernel_flag(cfg.ragged_decode_attn)
+    use_fused = cfg.altup.enabled and \
+        resolve_kernel_flag(cfg.fused_decode_altup)
     x = embed_tokens(params, cfg, tokens)
     x = _shard(x, mesh, P(batch_axes(mesh), *([None] * (x.ndim - 1))))
     new_caches = dict(caches)
@@ -339,7 +461,9 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
                  else params[f"seg{si}"])
         x, nc = decode_segment(p_seg, caches[f"seg{si}"], seg,
                                cfg, x, pos, mesh=mesh,
-                               cross_stack=cross_stack)
+                               cross_stack=cross_stack, n_valid=n_valid,
+                               kv_len=kv_len, use_ragged=use_ragged,
+                               use_fused=use_fused)
         new_caches[f"seg{si}"] = nc
     logits = unembed(params, cfg, x, mesh=mesh)
     return logits, new_caches
@@ -376,7 +500,9 @@ def prefill(params, cfg: ModelConfig, tokens, T: int, *, mesh=None,
 
     step_fn: optional (params, caches, tokens, pos) -> (logits, caches)
     replacement for the eager decode_step — the serving engine passes its
-    jitted step so prefill shares the compiled hot loop."""
+    jitted step so prefill shares the compiled hot loop. pos reaches
+    step_fn as a plain int so the engine can derive its static kv-len
+    bucket from it."""
     B, S = tokens.shape
     caches = init_cache(cfg, B, T)
     if cfg.family == "encdec":
@@ -398,6 +524,5 @@ def prefill(params, cfg: ModelConfig, tokens, T: int, *, mesh=None,
                                                    mesh=mesh)
     logits = None
     for t in range(S):
-        logits, caches = step_fn(params, caches, tokens[:, t: t + 1],
-                                 jnp.asarray(t))
+        logits, caches = step_fn(params, caches, tokens[:, t: t + 1], t)
     return logits, caches

@@ -167,11 +167,18 @@ def sdpa(q, k, v, *, causal: bool, window, q_pos, k_pos, bias=None,
 def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
                     window, q_pos, k_pos, kv: Optional[tuple] = None,
                     x_kv: Optional[jax.Array] = None, bias=None,
-                    causal: Optional[bool] = None, banded: bool = False):
+                    causal: Optional[bool] = None, banded: bool = False,
+                    ragged_lengths: Optional[jax.Array] = None):
     """Full attention sub-block (no residual, no pre-norm — caller owns those).
 
     Returns (out, (k, v)) so callers can populate KV caches.
     kv: precomputed (k, v) (decode path with cache); x_kv: cross-attn source.
+    ragged_lengths: per-slot (B,) valid-cache-row counts — when given and
+    S == 1, attention runs through the length-aware Pallas decode kernel
+    (kernels/ragged_decode_attention.py) instead of the dense masked sdpa.
+    The caller guarantees row `t` of the cache is valid iff t < length —
+    this subsumes causal, per-slot-depth AND ring-window masking, which is
+    why no q_pos/k_pos reach the kernel.
     """
     dh = cfg.resolved_head_dim
     causal = cfg.causal if causal is None else causal
@@ -191,10 +198,15 @@ def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
             k = apply_rope(k, k_pos, cfg.rope_theta)
     else:
         k, v = kv
+    use_ragged = (ragged_lengths is not None and q.shape[1] == 1
+                  and kv is not None and bias is None and causal)
     use_banded = (banded and isinstance(window, int) and window > 0
                   and kv is None and bias is None and causal
                   and x_kv is None)
-    if use_banded:
+    if use_ragged:
+        from repro.kernels import ops as kops
+        out = kops.ragged_decode_attn(q, k, v, ragged_lengths)
+    elif use_banded:
         out = sdpa_local_banded(q, k, v, window=window)
     else:
         out = sdpa(q, k, v, causal=causal, window=window,

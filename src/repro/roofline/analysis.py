@@ -149,6 +149,46 @@ def memory_dict(compiled) -> Dict[str, float]:
     return out
 
 
+def decode_kv_bytes(cfg, lengths, *, T: int, dtype_bytes: int = 2,
+                    ragged: bool = True) -> float:
+    """KV-cache bytes READ by one decode step's attention, whole model.
+
+    The dense path scores every slot against the entire allocated cache:
+    bytes = n_layers * B * T * row_bytes regardless of how full a slot
+    is. The ragged path (length-aware kernel / kv-len bucket slicing)
+    reads only each slot's fill depth: bytes = n_layers * sum_b len_b *
+    row_bytes — O(len), not O(T), which is the whole point of the decode
+    kernel suite (decode is bandwidth-bound on exactly this read, Pope et
+    al. 2022). Ring (sliding-window) segments cap a slot's row count at
+    the window size on BOTH paths (their caches are allocated O(window)).
+
+    lengths: per-slot fill depths (iterable of ints). Returns bytes/step;
+    divide by len(lengths) for bytes/token at one-token-per-slot decode.
+    """
+    from repro.models.transformer import layer_plan  # lazy: no cycle
+    lengths = list(int(x) for x in lengths)
+    B = len(lengths)
+    hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    total = 0.0
+    for seg in layer_plan(cfg):
+        if seg.kind in ("attn", "shared_attn"):
+            row = 2 * hk * dh * dtype_bytes               # k + v
+            cap = min(T, seg.window) if seg.window > 0 else T
+        elif seg.kind == "mla":
+            row = (cfg.mla.kv_lora_rank
+                   + cfg.mla.qk_rope_head_dim) * dtype_bytes
+            cap = T
+        else:                                             # recurrent: O(1)
+            continue
+        n = seg.n if seg.kind != "shared_attn" else 1
+        if ragged:
+            rows = sum(min(ln, cap) for ln in lengths)
+        else:
+            rows = B * cap
+        total += n * rows * row
+    return total
+
+
 def roofline_terms(flops: float, bytes_accessed: float,
                    collective_bytes: float, *, n_chips: int,
                    hw: HardwareConfig = TPU_V5E,

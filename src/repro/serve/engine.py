@@ -1,23 +1,35 @@
 """Serving engine: continuous batching over slot-based KV caches.
 
 Two APIs share one jitted fused step (models/decode.decode_step — the
-widened (B, 1, K, d) AltUp stream + fused predict-correct stay on the hot
+widened (B, S, K, d) AltUp stream + fused predict-correct stay on the hot
 path):
 
 * submit()/step()/collect() — continuous batching. Requests are admitted
   into cache slots by serve/scheduler.SlotScheduler; every fused step
-  advances EVERY active slot by one token at its own depth (per-slot (B,)
-  position vector). A slot in the prefill phase consumes its next prompt
-  token, a slot in the decode phase consumes its last sampled token —
-  prefill-into-slot and batched decode are the SAME jitted computation,
-  so a new request starts filling the batch the step after it arrives.
-  Finished requests (EOS or max tokens) retire immediately and their slot
-  is recycled.
+  advances EVERY active slot at its own depth (per-slot (B,) position
+  vector). A slot in the prefill phase consumes its next CHUNK of prompt
+  tokens (chunked prefill: up to `prefill_chunk` tokens per step through
+  the same jitted step, so a long prompt costs ceil(len/chunk) steps and
+  never head-of-line-blocks decoding slots — they ride along in the same
+  batch, one token each, padded rows masked out); a slot in the decode
+  phase consumes its last sampled token. Finished requests (EOS or max
+  tokens) retire immediately and their slot is recycled.
 
 * generate() — legacy static batch (uniform prefill + scalar-pos decode
   loop). Kept as the baseline the continuous path is benchmarked against
   (benchmarks/serve_bench.py) and as the oracle it must match token-for-
   token (tests/test_serve.py).
+
+Decode-hot-path economics (see docs/kernels.md): the engine passes each
+step's per-slot depths down to the attention layers, which (a) slice the
+cache read to a host-computed power-of-two `kv-len bucket` >= the deepest
+slot (a STATIC slice — a handful of jit specializations instead of O(T)
+reads at every depth), and (b) on TPU route S=1 attention through the
+ragged Pallas decode kernel, which additionally skips kv blocks past each
+individual slot's depth. Chunked prefill is automatically disabled
+(chunk=1) for recurrent (rwkv/mamba) and ring-cache (sliding-window)
+models: recurrent state must advance token-by-token, and a ring write of
+a whole chunk would overwrite keys earlier chunk tokens still need.
 
 Greedy continuous decode is token-identical to per-request generate():
 per-slot computations are row-independent (MoE decode routing is pinned
@@ -27,6 +39,7 @@ NOT reproduce generate()'s shared-key jax.random stream.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Dict, Optional
 
@@ -40,25 +53,70 @@ from repro.models.decode import (decode_step, init_cache, prefill,
 from repro.serve.scheduler import SlotScheduler
 
 
-def _serve_step(params, caches, tokens, pos, *, cfg, mesh):
-    """Positional-arg wrapper so jit can donate the cache buffers."""
-    return decode_step(params, cfg, caches, tokens, pos, mesh=mesh)
+def _serve_step(params, caches, tokens, pos, n_valid, *, cfg, mesh,
+                kv_len=None):
+    """Positional-arg wrapper so jit can donate the cache buffers.
+
+    Returns only each slot's SAMPLED logits row (row n_valid-1, vocab
+    truncated) — gathered on device so the host transfer stays (B, V)
+    instead of (B, C, V) during chunked prefill."""
+    logits, caches = decode_step(params, cfg, caches, tokens, pos,
+                                 n_valid=n_valid, kv_len=kv_len, mesh=mesh)
+    B = tokens.shape[0]
+    rows = logits[jnp.arange(B), jnp.maximum(n_valid - 1, 0),
+                  :cfg.vocab_size]
+    return rows, caches
+
+
+def kv_bucket(needed: int, lo: int, cap: int) -> int:
+    """Static kv read-slice length: smallest power-of-two >= needed
+    (floored at `lo`, capped at `cap`). Shared by the engine and the
+    decode microbench (benchmarks/kernel_bench.py) so the benchmark
+    measures exactly the bucket policy the serving path dispatches."""
+    b = lo
+    while b < needed:
+        b *= 2
+    return min(b, cap)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_len: int, *,
-                 n_slots: int = 8, mesh=None):
+                 n_slots: int = 8, mesh=None, prefill_chunk: int = 8,
+                 kv_buckets: bool = True, kv_bucket_min: int = 32):
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.max_len = max_len
         self.n_slots = n_slots
-        self._step = jax.jit(partial(decode_step, cfg=cfg, mesh=mesh))
+        self._kv_buckets = kv_buckets
+        self._kv_bucket_min = kv_bucket_min
+        self._prefill_chunk = max(1, prefill_chunk)
+        self._step = jax.jit(partial(decode_step, cfg=cfg, mesh=mesh),
+                             static_argnames=("kv_len",))
         # continuous-batching state (allocated lazily on first submit)
         self._fused = jax.jit(partial(_serve_step, cfg=cfg, mesh=mesh),
+                              static_argnames=("kv_len",),
                               donate_argnums=(1,))
         self._reset = jax.jit(reset_slot, donate_argnums=(0,))
         self._sched: Optional[SlotScheduler] = None
         self._caches = None
         self._rngs: Dict[int, np.random.Generator] = {}
+        # prefill/decode split for benchmarks (benchmarks/serve_bench.py):
+        # step time is attributed proportionally to the tokens each phase
+        # consumed in that fused step
+        self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
+
+    def reset_stats(self) -> None:
+        """Zero the prefill/decode counters (benchmarks call this after
+        their warmup pass so compile time stays out of the split)."""
+        for k in self.stats:
+            self.stats[k] = type(self.stats[k])()
+
+    def _bucket(self, needed: int) -> int:
+        """Each bucket value is one jit specialization — log2(max_len)
+        of them, total."""
+        if not self._kv_buckets:
+            return self.max_len
+        return kv_bucket(needed, self._kv_bucket_min, self.max_len)
 
     # ------------------------------------------------------------------
     # continuous batching: submit / step / collect
@@ -75,8 +133,16 @@ class Engine:
         # attention/MLA caches self-clean on recycle (per-slot position
         # masking); only recurrent segments need a reset at admission
         from repro.models.transformer import layer_plan
+        plan = layer_plan(self.cfg)
         self._has_recurrent = any(s.kind in ("rwkv", "mamba")
-                                  for s in layer_plan(self.cfg))
+                                  for s in plan)
+        has_ring = any(s.kind in ("attn", "shared_attn") and s.window > 0
+                       for s in plan)
+        # chunked prefill needs token-order-free cache writes: recurrent
+        # state advances token-by-token, and ring writes of a whole chunk
+        # overwrite keys earlier chunk tokens still need
+        self._chunk = (1 if self._has_recurrent or has_ring
+                       else self._prefill_chunk)
         caches = init_cache(self.cfg, self.n_slots, self.max_len)
         if self.mesh is not None:
             from repro.sharding import cache_shardings
@@ -97,7 +163,8 @@ class Engine:
 
     def step(self) -> int:
         """One fused step: admit queued requests into free slots, advance
-        every active slot by one token, retire finished requests.
+        every active slot (a chunk of prompt tokens while prefilling, one
+        token while decoding), retire finished requests.
         Returns the number of slots that were active this step."""
         if self._sched is None:
             return 0
@@ -111,20 +178,43 @@ class Engine:
         if not active:
             return 0
         B = self.n_slots
-        tokens = np.zeros((B, 1), np.int32)
+        # pure-decode steps stay (B, 1); chunk width only when a prefill
+        # slot can use it (each width is one jit specialization)
+        C = self._chunk if any(st.in_prefill for st in active.values()) \
+            else 1
+        tokens = np.zeros((B, C), np.int32)
         pos = np.zeros((B,), np.int32)
-        samples = {}
+        nval = np.zeros((B,), np.int32)
+        samples: Dict[int, bool] = {}
+        pf_tokens = dec_tokens = 0
+        needed = 1
         for slot, st in active.items():
-            tokens[slot, 0] = st.next_token()
+            toks = st.next_tokens(C)
+            n = len(toks)
+            tokens[slot, :n] = toks
             pos[slot] = st.pos
-            samples[slot] = st.samples_this_step
-        logits, self._caches = self._fused(
+            nval[slot] = n
+            samples[slot] = st.samples_after(n)
+            if st.in_prefill:
+                pf_tokens += n
+            else:
+                dec_tokens += n
+            needed = max(needed, st.pos + n)
+        kv_len = self._bucket(needed)
+        t0 = time.perf_counter()
+        rows, self._caches = self._fused(
             self.params, self._caches, jnp.asarray(tokens),
-            jnp.asarray(pos))
-        V = self.cfg.vocab_size
-        lg = np.asarray(logits[:, 0, :V], np.float32)
+            jnp.asarray(pos), jnp.asarray(nval), kv_len=kv_len)
+        lg = np.asarray(rows, np.float32)                 # (B, V)
+        dt = time.perf_counter() - t0
+        total = max(pf_tokens + dec_tokens, 1)
+        self.stats["steps"] += 1
+        self.stats["prefill_tokens"] += pf_tokens
+        self.stats["decode_tokens"] += dec_tokens
+        self.stats["prefill_s"] += dt * pf_tokens / total
+        self.stats["decode_s"] += dt * dec_tokens / total
         for slot, st in active.items():
-            st.advance()
+            st.advance(int(nval[slot]))
             if not samples[slot]:
                 continue
             tok = self._sample_host(lg[slot], st.request)
@@ -192,14 +282,17 @@ class Engine:
         logits, caches = prefill(
             self.params, cfg, prompt_tokens, T=self.max_len, mesh=self.mesh,
             encoder_frames=encoder_frames,
-            step_fn=lambda p, c, tk, ps: self._step(p, caches=c, tokens=tk,
-                                                    pos=ps))
+            step_fn=lambda p, c, tk, t: self._step(
+                p, caches=c, tokens=tk, pos=jnp.asarray(t),
+                kv_len=self._bucket(t + 1)))
         outs = []
         tok = self._sample(logits[:, -1:], temperature, key, 0)
         outs.append(tok)
         for t in range(1, n_new):
             logits, caches = self._step(self.params, caches=caches,
-                                        tokens=tok, pos=jnp.asarray(S + t - 1))
+                                        tokens=tok,
+                                        pos=jnp.asarray(S + t - 1),
+                                        kv_len=self._bucket(S + t))
             tok = self._sample(logits[:, -1:], temperature, key, t)
             outs.append(tok)
         return jnp.concatenate(outs, axis=1)

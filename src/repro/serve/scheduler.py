@@ -53,23 +53,34 @@ class RequestState:
     def in_prefill(self) -> bool:
         return self.cursor < len(self.request.prompt)
 
-    def next_token(self) -> int:
-        """Token to feed at `pos` this step: prompt token during prefill,
-        last sampled token afterwards."""
+    def next_tokens(self, budget: int) -> List[int]:
+        """Tokens to feed at pos..pos+n-1 this step (chunked prefill):
+        up to `budget` prompt tokens while prefilling, else the single
+        last sampled token."""
         if self.in_prefill:
-            return self.request.prompt[self.cursor]
-        return self.generated[-1]
+            return self.request.prompt[self.cursor: self.cursor + budget]
+        return [self.generated[-1]]
+
+    def next_token(self) -> int:
+        """Single-token (budget-1) form of next_tokens."""
+        return self.next_tokens(1)[0]
+
+    def samples_after(self, n: int) -> bool:
+        """Whether feeding the next `n` tokens reaches the last prompt
+        token, i.e. this step's logits (row n-1) are sampled."""
+        return not self.in_prefill or \
+            self.cursor + n >= len(self.request.prompt)
 
     @property
     def samples_this_step(self) -> bool:
-        """Sampling starts at the LAST prompt token's logits."""
-        return self.cursor == len(self.request.prompt) - 1 or \
-            not self.in_prefill
+        """Sampling starts at the LAST prompt token's logits
+        (single-token form of samples_after)."""
+        return self.samples_after(1)
 
-    def advance(self) -> None:
+    def advance(self, n: int = 1) -> None:
         if self.in_prefill:
-            self.cursor += 1
-        self.pos += 1
+            self.cursor += n
+        self.pos += n
 
     def note_token(self, token: int) -> None:
         self.generated.append(token)

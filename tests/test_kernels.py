@@ -8,6 +8,8 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.altup_fused import altup_predict_correct as altup_raw
 from repro.kernels.flash_attention import flash_attention as fa_raw
+from repro.kernels.ragged_decode_attention import (
+    ragged_decode_attention as ragged_raw)
 from repro.kernels.rwkv6_scan import rwkv6_wkv as rwkv_raw
 
 KEY = jax.random.PRNGKey(7)
@@ -73,6 +75,121 @@ def test_flash_attention_gqa_wrapper():
     want = want.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# ragged decode-attention kernel (serving hot path)
+# --------------------------------------------------------------------------
+
+def _slot_lengths(B, T, seed=0):
+    """Per-slot fill depths including an EMPTY and a FULL slot."""
+    lens = np.random.default_rng(seed).integers(1, T + 1, B)
+    lens[0] = 0
+    lens[-1] = T
+    return jnp.asarray(lens, jnp.int32)
+
+
+@pytest.mark.parametrize("B,T,Hk,rep,dh,bk", [
+    (4, 96, 2, 1, 32, 32),      # no grouping (H == Hk)
+    (4, 96, 2, 2, 32, 32),      # GQA 2:1
+    (3, 128, 1, 4, 64, 64),     # GQA 4:1, single kv head
+    (5, 100, 2, 2, 16, 32),     # odd T % block_k
+    (2, 40, 2, 3, 16, 64),      # block_k > T (single clamped block)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_decode_kernel_sweep(B, T, Hk, rep, dh, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hk, rep, dh), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hk, dh), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hk, dh), dtype)
+    lens = _slot_lengths(B, T, seed=B)
+    got = ragged_raw(q, k, v, lens, block_k=bk, interpret=True)
+    want = ref.ragged_decode_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("H,Hk", [(4, 4), (4, 2), (8, 2)])
+def test_ragged_wrapper_matches_dense_sdpa(H, Hk):
+    """The model-layout wrapper == layers.sdpa with per-slot causal
+    masking — the dense fallback oracle the serving path dispatches to."""
+    from repro.models.layers import sdpa
+    B, T, dh = 4, 64, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh))
+    k = jax.random.normal(ks[1], (B, T, Hk, dh))
+    v = jax.random.normal(ks[2], (B, T, Hk, dh))
+    lens = jnp.asarray([1, 17, 40, 64], jnp.int32)
+    got = ops.ragged_decode_attn(q, k, v, lens, block_k=32)
+    q_pos = (lens - 1)[:, None]
+    want = sdpa(q, k, v, causal=True, window=None, q_pos=q_pos,
+                k_pos=jnp.arange(T))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ragged_kernel_ring_window_wraparound():
+    """Sliding-window decode on a WRAPPED ring cache == dense windowed
+    attention over the full linear history. The ring needs no index remap
+    in the kernel: attention is permutation-invariant over the key set,
+    and a depth-p ring holds exactly the last min(p+1, W) positions."""
+    from repro.models.layers import sdpa
+    B, W, Hk, rep, dh = 3, 16, 2, 2, 16
+    Tfull = 40
+    pos = jnp.asarray([5, 17, 39], jnp.int32)      # pre-, just-, deep-wrap
+    ks = jax.random.split(KEY, 3)
+    kfull = jax.random.normal(ks[0], (B, Tfull, Hk, dh))
+    vfull = jax.random.normal(ks[1], (B, Tfull, Hk, dh))
+    q = jax.random.normal(ks[2], (B, 1, Hk * rep, dh))
+    # build the ring the decode path builds: row t%W holds position t
+    kr = jnp.zeros((B, W, Hk, dh))
+    vr = jnp.zeros((B, W, Hk, dh))
+    for b in range(B):
+        for t in range(int(pos[b]) + 1):
+            kr = kr.at[b, t % W].set(kfull[b, t])
+            vr = vr.at[b, t % W].set(vfull[b, t])
+    lens = jnp.minimum(pos + 1, W)
+    got = ops.ragged_decode_attn(q, kr, vr, lens, block_k=8)
+    want = sdpa(q, kfull, vfull, causal=True, window=W,
+                q_pos=pos[:, None], k_pos=jnp.arange(Tfull))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_block_skip_boundaries():
+    """Block-skipping (causal + window pl.when grids) is output-invariant
+    across block shapes, including windows that cross block bounds."""
+    BH, S, dh = 2, 192, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (BH, S, dh))
+    k = jax.random.normal(ks[1], (BH, S, dh))
+    v = jax.random.normal(ks[2], (BH, S, dh))
+    for causal, window in [(True, 0), (True, 40), (True, 64), (False, 0)]:
+        want = ref.attention_ref(q, k, v, causal=causal, window=window)
+        for bq, bk in [(32, 64), (64, 32), (192, 64)]:
+            got = fa_raw(q, k, v, causal=causal, window=window,
+                         block_q=bq, block_k=bk, interpret=True)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5,
+                err_msg=f"causal={causal} window={window} bq={bq} bk={bk}")
+
+
+def test_decode_altup_fused_batched_single_token():
+    """The decode-loop fused predict+correct wrapper on (B, S, K, d)
+    streams (S=1 decode tick, S=chunk prefill) vs the unfused oracle."""
+    for B, S, K, d in [(3, 1, 2, 64), (2, 4, 3, 32), (8, 1, 4, 128)]:
+        ks = jax.random.split(jax.random.fold_in(KEY, B * S), 5)
+        xw = jax.random.normal(ks[0], (B, S, K, d))
+        xt = jax.random.normal(ks[1], (B, S, d))
+        p = jax.random.normal(ks[2], (K, K), jnp.float32)
+        g = jax.random.normal(ks[3], (K,), jnp.float32)
+        sel = (jnp.arange(K) == 0).astype(jnp.float32)
+        got = ops.decode_altup_predict_correct(xw, xt, sel, p, g)
+        want = ref.altup_predict_correct_ref(
+            xw.reshape(B * S, K, d), xt.reshape(B * S, d), sel, p, g
+        ).reshape(B, S, K, d)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("S,Dh,chunk", [(32, 16, 8), (64, 32, 16),

@@ -52,6 +52,16 @@ ORACLE_CFGS = {
                           vocab_size=128, altup=AltUpConfig(K=2),
                           ssm=SSMConfig(d_state=8, d_conv=4, expand=2,
                                         head_dim=16, shared_every=2)),
+    # decode kernel suite forced ON (interpret mode on CPU): the ragged
+    # Pallas decode-attention kernel must keep continuous == static
+    # token-for-token for dense, GQA and ring-window configs, and the
+    # fused predict+correct kernel must keep the AltUp stream identical
+    "ragged-dense": CFG.replace(name="srv-rg", ragged_decode_attn=True),
+    "ragged-gqa": CFG.replace(name="srv-rg-gqa", n_heads=4, n_kv_heads=2,
+                              ragged_decode_attn=True),
+    "ragged-windowed": CFG.replace(name="srv-rg-win", window_size=4,
+                                   ragged_decode_attn=True),
+    "fused-altup": CFG.replace(name="srv-fused", fused_decode_altup=True),
 }
 
 
@@ -109,6 +119,54 @@ def test_continuous_batching_oracle(name):
     out = eng.run()
     got = [out[r] for r in rids]
     assert got == want, (name, got, want)
+
+
+def test_chunked_prefill_oracle_long_prompts():
+    """Chunked prefill (multi-token steps, odd prompt/chunk ratios,
+    decode slots riding along in the same padded batch) == static."""
+    cfg = CFG.replace(name="srv-chunk")
+    params = init_params(KEY, cfg)
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(KEY, 50 + i),
+                                             (ln,), 0, cfg.vocab_size))
+               for i, ln in enumerate([11, 3, 17, 6])]
+    n_news = [4, 8, 3, 5]
+    static = Engine(cfg, params, max_len=32)
+    want = [np.asarray(static.generate(jnp.asarray(p)[None], n))
+            .ravel().tolist() for p, n in zip(prompts, n_news)]
+    for chunk in (1, 4, 8):
+        eng = Engine(cfg, params, max_len=32, n_slots=2,
+                     prefill_chunk=chunk)
+        rids = [eng.submit(p, n) for p, n in zip(prompts, n_news)]
+        out = eng.run()
+        assert [out[r] for r in rids] == want, chunk
+    # a 17-token prompt at chunk=4 costs ceil(17/4)=5 fused steps (the
+    # last chunk carries the final prompt token AND samples), not 17
+    eng = Engine(cfg, params, max_len=32, n_slots=2, prefill_chunk=4)
+    eng.submit(prompts[2], 1)
+    steps = 0
+    while eng.has_work:
+        eng.step()
+        steps += 1
+    assert steps == 5
+    assert eng.stats["prefill_tokens"] == 17
+
+
+def test_kv_bucket_slicing_is_exact():
+    """The static kv-len bucket read slice changes bytes touched, never
+    tokens: buckets on == buckets off, and stats record the split."""
+    params = init_params(KEY, CFG)
+    prompt = np.asarray(jax.random.randint(KEY, (6,), 0, CFG.vocab_size))
+    outs = []
+    for kv_buckets in (True, False):
+        eng = Engine(CFG, params, max_len=64, n_slots=2,
+                     kv_buckets=kv_buckets)
+        rid = eng.submit(prompt, 5)
+        outs.append(eng.run()[rid])
+        # the first sampled token rides on the last prefill chunk, so
+        # decode-phase steps feed the remaining 4 generated tokens
+        assert eng.stats["decode_tokens"] == 4
+        assert eng.stats["prefill_tokens"] == len(prompt)
+    assert outs[0] == outs[1]
 
 
 def test_eos_retirement_and_slot_reuse():

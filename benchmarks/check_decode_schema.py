@@ -1,0 +1,78 @@
+"""Assert the BENCH_decode.json schema (CI kernel-suite job).
+
+Bench regressions must fail loudly instead of silently renaming or
+dropping keys: downstream consumers (ROADMAP claims, the serving docs,
+acceptance gates on the quantized-cache speedup) read these keys by
+name. Two checks:
+
+  1. the committed repo-root BENCH_decode.json parses and carries every
+     required key (stale-artifact guard);
+  2. with --regen, a fresh small-shape run of decode_attn_bench (written
+     to a temp dir, never clobbering the committed artifact) satisfies
+     the same schema (code-drift guard).
+
+  PYTHONPATH=src python benchmarks/check_decode_schema.py [--regen]
+"""
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+TOP_KEYS = (
+    "shape", "backend", "dtypes", "rows",
+    "int8_speedup_vs_fp32_at_full_fill",
+    "fp8_speedup_vs_fp32_at_full_fill",
+    "ragged_kernel_us_per_step", "ragged_kernel_quant_us_per_step",
+    "ragged_kernel_mode",
+)
+ROW_KEYS = (
+    "kv_dtype", "fill_frac", "fill", "kv_bucket",
+    "us_per_step_dense_fp32", "us_per_step",
+    "tokens_per_s_dense_fp32", "tokens_per_s",
+    "speedup_vs_dense_fp32",
+    "kv_bytes_per_token", "kv_bytes_per_token_dense_fp32",
+)
+DTYPES = ("float32", "bf16", "int8", "fp8")
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        payload = json.load(f)
+    missing = [k for k in TOP_KEYS if k not in payload]
+    assert not missing, f"{path}: missing top-level keys {missing}"
+    rows = payload["rows"]
+    assert rows, f"{path}: empty rows"
+    for i, row in enumerate(rows):
+        missing = [k for k in ROW_KEYS if k not in row]
+        assert not missing, f"{path}: row {i} missing keys {missing}"
+    seen = {r["kv_dtype"] for r in rows}
+    assert seen == set(DTYPES), \
+        f"{path}: kv_dtype sweep covers {sorted(seen)}, want {DTYPES}"
+    full = {r["kv_dtype"] for r in rows if r["fill_frac"] == 1.0}
+    assert full == set(DTYPES), \
+        f"{path}: full-fill row missing for {set(DTYPES) - full}"
+    print(f"ok: {path} ({len(rows)} rows)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="also regenerate a small-shape artifact in a "
+                         "temp dir and schema-check it")
+    args = ap.parse_args()
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    check(os.path.join(root, "BENCH_decode.json"))
+    if args.regen:
+        if root not in sys.path:          # `python benchmarks/...` direct
+            sys.path.insert(0, root)
+        from benchmarks.kernel_bench import decode_attn_bench
+        with tempfile.TemporaryDirectory() as td:
+            decode_attn_bench(B=2, T=128, Hk=2, rep=2, dh=16,
+                              n_layers=2, outdir=td)
+            check(os.path.join(td, "BENCH_decode.json"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,10 +4,12 @@ fused AltUp kernel's claim is 1 read + 1 write of the (T, K, d) stream).
 us_per_call on CPU is NOT a TPU number — the derived column reports the
 bytes-roofline the kernel is designed to hit.
 
-Also emits BENCH_decode.json: the decode-attention microbench comparing
-the dense O(T) cache read against the length-aware serving path (kv-len
-bucket slice on CPU; the ragged Pallas kernel additionally skips per-slot
-blocks on TPU) across cache fill fractions — tokens/s measured, KV
+Also emits BENCH_decode.json: the decode-attention microbench sweeping
+kv-cache dtype (float32 | bf16 | int8 | fp8) x cache fill fraction —
+the dense O(T) fp32 read is the baseline, each variant is the
+length-aware serving dispatch for that storage (kv-len bucket slice +
+dequant on CPU; the ragged Pallas kernel additionally skips per-slot
+blocks and fuses the dequant on TPU). tokens/s measured, per-dtype KV
 bytes/token from roofline.analysis.decode_kv_bytes."""
 import time
 from functools import partial
@@ -27,15 +29,37 @@ def _time(f, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def decode_attn_bench(B: int = 8, T: int = 1024, Hk: int = 4, rep: int = 2,
-                      dh: int = 64, n_layers: int = 4):
-    """Decode-attention cost vs slot fill depth: dense full-cache read vs
-    the length-aware path the serving engine actually dispatches to on
-    this backend (static kv-len bucket slice; on TPU the ragged kernel
-    also skips blocks per slot INSIDE the bucket). Writes
-    BENCH_decode.json."""
+KV_DTYPES = ("float32", "bf16", "int8", "fp8")
+FILL_FRACS = (1 / 16, 1 / 8, 1 / 4, 1 / 2, 1.0)
+
+
+def _cache_as(k, v, kv_dtype):
+    """Materialize the slot cache in a given kv_cache_dtype: float modes
+    cast; quantized modes return (codes, scales) via kernels/quant —
+    exactly what decode.py's quantize-on-write stores."""
+    from repro.kernels import quant
+    spec = quant.resolve_kv_spec(kv_dtype, k.dtype)
+    kq, ksc = quant.quantize(k, spec)
+    vq, vsc = quant.quantize(v, spec)
+    return kq, vq, ksc, vsc
+
+
+def decode_attn_bench(B: int = 8, T: int = 2048, Hk: int = 4, rep: int = 2,
+                      dh: int = 64, n_layers: int = 4, outdir=None):
+    """Decode-attention cost, kv-cache dtype x slot fill depth.
+
+    Two axes of the same bandwidth story: the length-aware read (kv-len
+    bucket slice; on TPU the ragged kernel additionally skips per-slot
+    blocks INSIDE the bucket) makes decode O(len) rows, and the
+    quantized cache (int8/fp8 codes + f32 scales, dequant fused into the
+    read) shrinks every remaining row 2-4x. Each timed variant is the
+    dispatch the serving engine actually takes on this backend; the
+    fp32 full-cache dense read is the common baseline. Writes
+    BENCH_decode.json (schema asserted by benchmarks/check_decode_schema
+    in CI)."""
     from repro.config import ModelConfig
     from repro.models.layers import sdpa
+    from repro.kernels import quant
     from repro.roofline.analysis import decode_kv_bytes
 
     H = Hk * rep
@@ -48,56 +72,103 @@ def decode_attn_bench(B: int = 8, T: int = 1024, Hk: int = 4, rep: int = 2,
                       n_heads=H, n_kv_heads=Hk, head_dim=dh)
 
     @jax.jit
-    def dense(q, k, v, q_pos):
+    def dense_fp32(q, k, v, q_pos):
         return sdpa(q, k, v, causal=True, window=None, q_pos=q_pos,
                     k_pos=jnp.arange(k.shape[1]))
 
     @partial(jax.jit, static_argnames=("bucket",))
-    def ragged(q, k, v, q_pos, *, bucket):
+    def sliced(q, k, v, q_pos, *, bucket):
         return sdpa(q, k[:, :bucket], v[:, :bucket], causal=True,
                     window=None, q_pos=q_pos, k_pos=jnp.arange(bucket))
 
+    @partial(jax.jit, static_argnames=("bucket",))
+    def sliced_quant(q, kq, vq, ksc, vsc, q_pos, *, bucket):
+        # the engine's dense-fallback dispatch for a quantized cache:
+        # dequant the bucket slice, then sdpa (the kernels fuse this)
+        kd = quant.dequantize(kq[:, :bucket], ksc[:, :bucket], q.dtype)
+        vd = quant.dequantize(vq[:, :bucket], vsc[:, :bucket], q.dtype)
+        return sdpa(q, kd, vd, causal=True, window=None, q_pos=q_pos,
+                    k_pos=jnp.arange(bucket))
+
     from repro.serve.engine import kv_bucket  # the engine's exact policy
 
-    rows = []
-    for frac in (1 / 16, 1 / 8, 1 / 4, 1 / 2, 1.0):
+    # the dense fp32 baseline does not depend on kv_dtype: time it ONCE
+    # per fill so every dtype row divides by the same denominator
+    # (instead of a fresh noisy sample per (dtype, fill) pair)
+    base = {}
+    for frac in FILL_FRACS:
         fill = max(int(T * frac), 1)
         lengths = jnp.full((B,), fill, jnp.int32)
         q_pos = (lengths - 1)[:, None]
-        bucket = kv_bucket(fill, 32, T)
-        us_d = _time(dense, q, k, v, q_pos)
-        us_r = _time(partial(ragged, bucket=bucket), q, k, v, q_pos)
-        bpt_d = decode_kv_bytes(cfg, lengths, T=T, ragged=False) / B
-        bpt_r = decode_kv_bytes(cfg, lengths, T=T, ragged=True) / B
-        rows.append({
-            "fill_frac": frac, "fill": fill, "kv_bucket": bucket,
-            "us_per_step_dense": us_d, "us_per_step_ragged": us_r,
-            "tokens_per_s_dense": B / (us_d * 1e-6),
-            "tokens_per_s_ragged": B / (us_r * 1e-6),
-            "speedup": us_d / us_r,
-            "kv_bytes_per_token_dense": bpt_d,
-            "kv_bytes_per_token_ragged": bpt_r,
-        })
-    # the Pallas kernel itself (interpret-mode on CPU: a correctness
+        base[frac] = {
+            "us": _time(dense_fp32, q, k, v, q_pos),
+            "bpt": decode_kv_bytes(cfg, lengths, T=T, ragged=False,
+                                   kv_dtype="float32") / B,
+        }
+
+    rows = []
+    full_tps = {}
+    for kv_dtype in KV_DTYPES:
+        kq, vq, ksc, vsc = _cache_as(k, v, kv_dtype)
+        for frac in FILL_FRACS:
+            fill = max(int(T * frac), 1)
+            lengths = jnp.full((B,), fill, jnp.int32)
+            q_pos = (lengths - 1)[:, None]
+            bucket = kv_bucket(fill, 32, T)
+            us_d, bpt_d = base[frac]["us"], base[frac]["bpt"]
+            if ksc is None:
+                us_r = _time(partial(sliced, bucket=bucket),
+                             q, kq, vq, q_pos)
+            else:
+                us_r = _time(partial(sliced_quant, bucket=bucket),
+                             q, kq, vq, ksc, vsc, q_pos)
+            bpt_r = decode_kv_bytes(cfg, lengths, T=T, ragged=True,
+                                    kv_dtype=kv_dtype) / B
+            tps = B / (us_r * 1e-6)
+            if frac == 1.0:
+                full_tps[kv_dtype] = tps
+            rows.append({
+                "kv_dtype": kv_dtype,
+                "fill_frac": frac, "fill": fill, "kv_bucket": bucket,
+                "us_per_step_dense_fp32": us_d, "us_per_step": us_r,
+                "tokens_per_s_dense_fp32": B / (us_d * 1e-6),
+                "tokens_per_s": tps,
+                "speedup_vs_dense_fp32": us_d / us_r,
+                "kv_bytes_per_token": bpt_r,
+                "kv_bytes_per_token_dense_fp32": bpt_d,
+            })
+    # the Pallas kernels themselves (interpret-mode on CPU: a correctness
     # artifact, not a speed number; compiled on TPU)
     lengths = jnp.full((B,), max(T // 4, 1), jnp.int32)
     kernel_us = _time(partial(ops.ragged_decode_attn, block_k=128),
                       q, k, v, lengths)
+    k8, v8, k8s, v8s = _cache_as(k, v, "int8")
+    kernel_q_us = _time(partial(ops.ragged_decode_attn, block_k=128),
+                        q, k8, v8, lengths, k8s, v8s)
     payload = {
         "shape": {"B": B, "T": T, "Hk": Hk, "rep": rep, "dh": dh,
                   "n_layers": n_layers},
         "backend": jax.default_backend(),
+        "dtypes": list(KV_DTYPES),
         "rows": rows,
+        # acceptance headline: quantized vs fp32 cache, BOTH on the
+        # length-aware path at 100% fill — pure storage-bandwidth ratio
+        "int8_speedup_vs_fp32_at_full_fill":
+            full_tps["int8"] / full_tps["float32"],
+        "fp8_speedup_vs_fp32_at_full_fill":
+            full_tps["fp8"] / full_tps["float32"],
         "ragged_kernel_us_per_step": kernel_us,
+        "ragged_kernel_quant_us_per_step": kernel_q_us,
         "ragged_kernel_mode": ("compiled"
                                if jax.default_backend() == "tpu"
                                else "interpret"),
     }
     from benchmarks.common import emit_json
-    path = emit_json(payload, "BENCH_decode.json")
-    qtr = rows[2]
-    print(f"# wrote {path} (at 25% fill: {qtr['speedup']:.2f}x tokens/s "
-          f"vs dense, {qtr['kv_bytes_per_token_dense'] / max(qtr['kv_bytes_per_token_ragged'], 1):.1f}x fewer KV bytes)")
+    path = emit_json(payload, "BENCH_decode.json", outdir=outdir)
+    print(f"# wrote {path} (full fill: int8 "
+          f"{payload['int8_speedup_vs_fp32_at_full_fill']:.2f}x tokens/s "
+          f"vs fp32 cache, fp8 "
+          f"{payload['fp8_speedup_vs_fp32_at_full_fill']:.2f}x)")
     return rows
 
 
@@ -129,11 +200,12 @@ def run():
                      *a, block_q=128, block_k=128), q, kk, vv),
                  "derived": f"vmem_tiles={S//128}x{S//128}"})
     for r in decode_attn_bench():
-        rows.append({"name": f"decode_attn(fill={r['fill_frac']:.3g})",
-                     "us_per_call": r["us_per_step_ragged"],
-                     "derived": (f"dense={r['us_per_step_dense']:.0f}us "
-                                 f"speedup={r['speedup']:.2f}x "
-                                 f"kvB/tok={r['kv_bytes_per_token_ragged']:.0f}")})
+        rows.append({"name": (f"decode_attn({r['kv_dtype']},"
+                              f"fill={r['fill_frac']:.3g})"),
+                     "us_per_call": r["us_per_step"],
+                     "derived": (f"dense_fp32={r['us_per_step_dense_fp32']:.0f}us "
+                                 f"speedup={r['speedup_vs_dense_fp32']:.2f}x "
+                                 f"kvB/tok={r['kv_bytes_per_token']:.0f}")})
     return rows
 
 

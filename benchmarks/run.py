@@ -1,14 +1,15 @@
 """Benchmark aggregator — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only table1,...] [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--only table1,...]
 
 Prints one CSV block per table (``name,us_per_call,derived`` style columns
-per module). Results land in benchmarks/results/*.csv too.
+per module). Machine-readable artifacts are written ONLY by the modules
+themselves, to the repo-root BENCH_*.json files (kernel_bench ->
+BENCH_decode.json, serve_bench -> BENCH_serve.json) — one canonical
+location, no per-module duplicates under benchmarks/results/.
 """
 import argparse
 import importlib
-import json
-import os
 import time
 
 MODULES = [
@@ -29,8 +30,6 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
-    outdir = os.path.join(os.path.dirname(__file__), "results")
-    os.makedirs(outdir, exist_ok=True)
     from benchmarks.common import emit_csv
     for mod_name, desc in MODULES:
         if only and mod_name not in only:
@@ -40,8 +39,6 @@ def main() -> None:
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         rows = mod.run()
         emit_csv(rows, mod.COLS)
-        with open(os.path.join(outdir, f"{mod_name}.json"), "w") as f:
-            json.dump(rows, f, indent=1)
         print(f"# {mod_name} done in {time.time()-t0:.0f}s", flush=True)
 
 

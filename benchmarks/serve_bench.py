@@ -97,9 +97,10 @@ def run_static(params, trace) -> Dict:
             "makespan_s": span}
 
 
-def run_continuous(params, trace) -> Dict:
+def run_continuous(params, trace, cfg=None, name="continuous") -> Dict:
     from repro.serve.engine import Engine
-    eng = Engine(CFG, params, max_len=MAX_LEN, n_slots=N_SLOTS)
+    cfg = cfg or CFG
+    eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=N_SLOTS)
     # warm the fused step (compile) outside the timed region — at the
     # trace's max depth, so every kv-len bucket specialization the timed
     # run will hit is already compiled
@@ -135,7 +136,7 @@ def run_continuous(params, trace) -> Dict:
     p50, p99 = _percentiles(lat_ms)
     span = last_done - trace[0]["arrival"]
     st = eng.stats
-    return {"name": "continuous", "tokens_per_s": total_tokens / span,
+    return {"name": name, "tokens_per_s": total_tokens / span,
             "ms_per_token_p50": p50, "ms_per_token_p99": p99,
             "makespan_s": span,
             # prefill/decode time split (engine-attributed per fused step)
@@ -150,18 +151,34 @@ def run() -> List[Dict]:
     params = init_params(key, CFG)
     trace = make_trace()
     rows = [run_static(params, trace), run_continuous(params, trace)]
+    # quantized KV-cache serving: same weights, same trace, int8 slot
+    # caches (codes + scales, quantize-on-write / fused dequant) — the
+    # measured tokens/s delta of flipping cfg.kv_cache_dtype alone
+    cfg8 = CFG.replace(name="serve-bench-int8", kv_cache_dtype="int8")
+    rows.append(run_continuous(params, trace, cfg=cfg8,
+                               name="continuous-int8"))
     from benchmarks.common import emit_json
-    st, ct = rows
+    from repro.roofline.analysis import decode_kv_bytes
+    st, ct, ct8 = rows
+    # bytes/token of one decode step at the trace's final depths, per
+    # cache dtype (the roofline model the measured delta should track)
+    depths = [min(len(r["prompt"]) + r["n_new"], MAX_LEN) for r in trace]
+    depths = (depths * ((N_SLOTS + len(depths) - 1) // len(depths)))[:N_SLOTS]
+    bpt = {d: decode_kv_bytes(CFG, depths, T=MAX_LEN, kv_dtype=d)
+           / len(depths) for d in ("auto", "bf16", "int8", "fp8")}
     payload = {
         "config": CFG.name, "n_requests": len(trace), "n_slots": N_SLOTS,
-        "static": st, "continuous": ct,
+        "static": st, "continuous": ct, "continuous_int8": ct8,
         "throughput_speedup": ct["tokens_per_s"] / st["tokens_per_s"],
+        "int8_tokens_per_s_delta": ct8["tokens_per_s"] / ct["tokens_per_s"],
+        "kv_bytes_per_token_by_dtype": bpt,
     }
     path = emit_json(payload, "BENCH_serve.json")
     pf, dc = ct.get("prefill_s", 0.0), ct.get("decode_s", 0.0)
     print(f"# wrote {path} (continuous/static tokens/s = "
-          f"{payload['throughput_speedup']:.2f}x; continuous time split "
-          f"prefill={pf:.3f}s decode={dc:.3f}s)")
+          f"{payload['throughput_speedup']:.2f}x; int8 cache delta = "
+          f"{payload['int8_tokens_per_s_delta']:.2f}x; continuous time "
+          f"split prefill={pf:.3f}s decode={dc:.3f}s)")
     return rows
 
 

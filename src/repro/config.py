@@ -159,10 +159,21 @@ class ModelConfig:
     ragged_decode_attn: Optional[bool] = None
     # fused predict+correct Pallas kernel inside the decode layer loop:
     fused_decode_altup: Optional[bool] = None
+    # KV-cache storage dtype for serving (decode slot caches, incl. ring
+    # caches and MLA latents). "auto" = the activation dtype (today's
+    # behavior, bit-identical); "float32"/"bf16" = explicit float
+    # storage; "int8"/"fp8" = quantized codes + per-head, per-position
+    # f32 scales, dequant fused into the decode kernels — halves-to-
+    # quarters decode HBM bytes (Pope et al. 2022). Resolved by
+    # kernels/quant.resolve_kv_spec; recurrent (rwkv/mamba) state always
+    # stays float.
+    kv_cache_dtype: str = "auto"
 
     def __post_init__(self):
         assert self.family in (
             "dense", "moe", "mla_moe", "rwkv6", "hybrid", "encdec", "vlm")
+        assert self.kv_cache_dtype in (
+            "auto", "float32", "bf16", "int8", "fp8"), self.kv_cache_dtype
 
     @property
     def resolved_head_dim(self) -> int:

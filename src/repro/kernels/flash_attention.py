@@ -16,6 +16,13 @@ diagonal block through the index map — the TPU pipeline emitter elides
 copies whose block indices did not change, so skipped blocks cost neither
 FLOPs nor HBM reads. Outputs are identical to the masked full grid
 (tested in tests/test_kernels.py).
+
+Quantized K/V (the prefill side of the quantized KV-cache serving path,
+cfg.kv_cache_dtype = int8 | fp8): 1-byte codes plus per-row f32 scales
+`k_scale`/`v_scale` (BH, T) ride along as two extra refs through the same
+skip-remapped index map, and `code * scale` is fused into the kv-tile
+load in VMEM — dequantized K/V are never materialized in HBM, and a
+skipped block skips its scale fetch too.
 """
 from __future__ import annotations
 
@@ -47,9 +54,13 @@ def _block_skipped(qi, ki, *, causal: bool, window: int,
     return skip
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-               scale: float, causal: bool, window: int,
-               block_q: int, block_k: int, nk: int):
+def _fa_kernel(q_ref, k_ref, v_ref, *rest, scale: float, causal: bool,
+               window: int, block_q: int, block_k: int, nk: int,
+               quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -68,6 +79,10 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         q = q_ref[0].astype(jnp.float32)          # (bq, dh)
         k = k_ref[0].astype(jnp.float32)          # (bk, dh)
         v = v_ref[0].astype(jnp.float32)
+        if quantized:
+            # fused dequant: codes * per-row scale, in VMEM
+            k = k * ks_ref[0][:, None]
+            v = v * vs_ref[0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         q_pos = qi * block_q + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 0)
@@ -97,11 +112,16 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    k_scale: jax.Array | None = None,
+                    v_scale: jax.Array | None = None,
                     causal: bool = True, window: int = 0,
                     scale: float | None = None, block_q: int = 128,
                     block_k: int = 128,
                     interpret: bool | None = None) -> jax.Array:
     """q, k, v: (BH, S, dh) — GQA head expansion happens in ops.py.
+    k_scale/v_scale: optional (BH, T) f32 per-row dequant scales for
+    quantized (int8/fp8-code) k/v — dequant is fused into the kv-tile
+    load.
 
     Returns (BH, S, dh). interpret=None auto-detects from the backend
     (compiled on TPU, interpreted on CPU).
@@ -109,6 +129,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if interpret is None:
         from repro.kernels import default_interpret
         interpret = default_interpret()
+    quantized = k_scale is not None
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both k_scale and v_scale, or neither"
     BH, S, dh = q.shape
     T = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
@@ -117,7 +140,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     assert S % bq == 0 and T % bk == 0
     nq, nk = S // bq, T // bk
     kern = functools.partial(_fa_kernel, scale=scale, causal=causal,
-                             window=window, block_q=bq, block_k=bk, nk=nk)
+                             window=window, block_q=bq, block_k=bk, nk=nk,
+                             quantized=quantized)
 
     def kv_map(b, i, j):
         # remap skipped blocks' fetch to q-block i's diagonal kv block
@@ -128,14 +152,27 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                               block_q=bq, block_k=bk)
         return (b, jnp.where(skip, (i * bq) // bk, j), 0)
 
+    def scale_map(b, i, j):
+        # same remap: a skipped kv block skips its scale fetch too
+        bj = kv_map(b, i, j)[1]
+        return (b, bj)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bk, dh), kv_map),
+        pl.BlockSpec((1, bk, dh), kv_map),
+    ]
+    operands = [q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bk), scale_map),
+                     pl.BlockSpec((1, bk), scale_map)]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+
     return pl.pallas_call(
         kern,
         grid=(BH, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, dh), kv_map),
-            pl.BlockSpec((1, bk, dh), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
         scratch_shapes=[
@@ -144,4 +181,4 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, dh), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)

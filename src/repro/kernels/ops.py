@@ -55,13 +55,17 @@ def decode_altup_predict_correct(x_wide, x_tilde, sel, p, g):
 
 
 @partial(jax.jit, static_argnames=("block_k",))
-def ragged_decode_attn(q, k, v, lengths, *, block_k=128):
+def ragged_decode_attn(q, k, v, lengths, k_scale=None, v_scale=None, *,
+                       block_k=128):
     """Length-aware S=1 GQA decode attention over slot caches.
 
     q: (B, 1, H, dh) single-token queries; k, v: (B, T, Hk, dh) slot
     caches; lengths: (B,) per-slot valid-row counts. Heads are grouped
     (B, Hk, rep, dh) — matching sdpa's GQA layout — so each cache row is
-    read once per kv head, not once per query head. Returns (B, 1, H, dh).
+    read once per kv head, not once per query head. k_scale/v_scale:
+    optional (B, T, Hk) f32 per-row-head scales for quantized (int8/fp8)
+    slot caches — dequant fuses into the kv-block load inside the kernel.
+    Returns (B, 1, H, dh).
     """
     B, S, H, dh = q.shape
     assert S == 1, "ragged decode kernel is single-token (S=1) only"
@@ -69,23 +73,36 @@ def ragged_decode_attn(q, k, v, lengths, *, block_k=128):
     rep = H // Hk
     qg = q[:, 0].reshape(B, Hk, rep, dh)
     o = ragged_mod.ragged_decode_attention(qg, k, v, lengths,
+                                           k_scale=k_scale,
+                                           v_scale=v_scale,
                                            block_k=block_k,
                                            interpret=_INTERPRET)
     return o.reshape(B, 1, H, dh)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
-def mha_flash(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
-    """q: (B, S, H, dh), k/v: (B, T, Hk, dh) with GQA expansion."""
+def mha_flash(q, k, v, k_scale=None, v_scale=None, *, causal=True,
+              window=0, block_q=128, block_k=128):
+    """q: (B, S, H, dh), k/v: (B, T, Hk, dh) with GQA expansion.
+    k_scale/v_scale: optional (B, T, Hk) f32 per-row-head scales for
+    quantized k/v (prefill over a quantized cache) — dequant fuses into
+    the kv-tile load; scales ride through the same GQA expansion."""
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both k_scale and v_scale, or neither"
     B, S, H, dh = q.shape
     T, Hk = k.shape[1], k.shape[2]
     rep = H // Hk
     kx = jnp.repeat(k, rep, axis=2) if rep > 1 else k
     vx = jnp.repeat(v, rep, axis=2) if rep > 1 else v
     fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], dh)
+    scales = {}
+    if k_scale is not None:
+        folds = lambda s: (jnp.repeat(s, rep, axis=2) if rep > 1 else s) \
+            .transpose(0, 2, 1).reshape(B * H, T)
+        scales = {"k_scale": folds(k_scale), "v_scale": folds(v_scale)}
     o = flash_attention.flash_attention(
         fold(q), fold(kx), fold(vx), causal=causal, window=window,
-        block_q=block_q, block_k=block_k, interpret=_INTERPRET)
+        block_q=block_q, block_k=block_k, interpret=_INTERPRET, **scales)
     return o.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
 
 

@@ -1,0 +1,157 @@
+"""Shared low-bit quantization helpers (KV-cache serving path + gradient
+compression).
+
+One copy of the scale/rounding logic, two consumers:
+
+* the quantized KV-cache serving path (models/decode.py quantize-on-write,
+  kernels/ragged_decode_attention.py + kernels/flash_attention.py fused
+  dequant) — symmetric per-head, per-position amax scales, deterministic
+  round-to-nearest (continuous-vs-static serving must be token-identical,
+  so cache rounding cannot be stochastic);
+* optim/compression.py's gradient int8 path — a single global scale with
+  stochastic rounding (unbiasedness matters there, determinism does not).
+
+Storage kinds (`KVQuantSpec.kind`):
+
+  float : no quantization; codes are the values, no scale tensor.
+  int8  : symmetric int8, scale = amax / 127, codes = round(x / scale).
+  fp8   : e4m3 with amax scaling to the e4m3 max normal (448): codes are
+          x / scale rounded through the float8_e4m3fn grid. On backends
+          with native fp8 the codes are STORED as float8_e4m3fn (1 byte);
+          otherwise storage falls back to bfloat16 — the numerics are
+          identical ("simulated fp8": same e4m3 rounding grid, same
+          scales), only the bytes saving is deferred to hardware that has
+          the type. roofline/analysis models fp8 at 1 byte either way
+          (the target-hardware bytes, not the simulation's).
+
+Scales are ALWAYS float32: a handful of scale bytes per cache row is
+noise next to the 2-4x code-byte saving, and f32 scales keep dequant
+error at pure rounding error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_QMAX = 127.0
+FP8_QMAX = 448.0          # float8_e4m3fn max normal
+# floor keeps all-zero rows (empty cache slots) dequantizing to exact 0
+# and division NaN-free; matches optim/compression's historical epsilon.
+SCALE_EPS = 1e-12
+
+KV_CACHE_DTYPES = ("auto", "float32", "bf16", "int8", "fp8")
+
+
+@functools.lru_cache(maxsize=1)
+def fp8_native() -> bool:
+    """True when the backend can hold + convert float8_e4m3fn arrays."""
+    try:
+        x = jnp.zeros((2,), jnp.float8_e4m3fn)
+        jax.block_until_ready(x.astype(jnp.float32))
+        return True
+    except Exception:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Resolved cache storage: what the codes are and how to scale them."""
+    kind: str                     # float | int8 | fp8
+    store_dtype: Any              # dtype of the cache code tensor
+    qmax: float = 0.0             # scale target (unused for float)
+
+    @property
+    def quantized(self) -> bool:
+        return self.kind != "float"
+
+
+def resolve_kv_spec(name: str, auto_dtype) -> KVQuantSpec:
+    """cfg.kv_cache_dtype -> KVQuantSpec. `auto_dtype` is the activation
+    dtype the cache would use today (the `auto` behavior, bit-identical
+    to the pre-quantization path)."""
+    if name == "auto":
+        return KVQuantSpec("float", jnp.dtype(auto_dtype))
+    if name == "float32":
+        return KVQuantSpec("float", jnp.dtype(jnp.float32))
+    if name == "bf16":
+        return KVQuantSpec("float", jnp.dtype(jnp.bfloat16))
+    if name == "int8":
+        return KVQuantSpec("int8", jnp.dtype(jnp.int8), INT8_QMAX)
+    if name == "fp8":
+        store = jnp.float8_e4m3fn if fp8_native() else jnp.bfloat16
+        return KVQuantSpec("fp8", jnp.dtype(store), FP8_QMAX)
+    raise ValueError(
+        f"kv_cache_dtype must be one of {KV_CACHE_DTYPES}, got {name!r}")
+
+
+def amax_scale(x: jax.Array, qmax: float, axis=-1) -> jax.Array:
+    """Symmetric f32 scale: max|x| over `axis` / qmax (axis=None: one
+    global scalar — the gradient-compression flavour)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis) / qmax \
+        + SCALE_EPS
+
+
+def _expand(scale, axis):
+    return scale if axis is None else jnp.expand_dims(scale, axis)
+
+
+def int8_round(y: jax.Array, *, key=None) -> jax.Array:
+    """Pre-scaled y in [-127, 127] -> int8 codes. key=None: deterministic
+    round-to-nearest (cache path). key given: stochastic rounding
+    (gradient path — unbiased in expectation, Stich et al.)."""
+    if key is None:
+        q = jnp.round(y)
+    else:
+        lo = jnp.floor(y)
+        q = lo + (jax.random.uniform(key, y.shape) < (y - lo))
+    return jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+
+
+def round_e4m3(y: jax.Array) -> jax.Array:
+    """Round f32 to the float8_e4m3fn grid in pure f32 math — the
+    "simulated fp8" path for backends whose jnp cannot hold/convert the
+    fp8 dtype (quantize() uses the native cast when it can). e4m3fn: 3
+    mantissa bits, normals down to 2^-6 (subnormal step 2^-9), saturating
+    at +-448. jnp.round is ties-to-even, matching the hardware cast."""
+    # frexp gives the EXACT binary exponent (log2+floor drifts one ulp
+    # at power-of-two boundaries): |y| = m * 2^e, m in [0.5, 1)
+    _, e = jnp.frexp(jnp.abs(y))
+    exp = jnp.clip(e - 1, -6, 8)             # normals >= 2^-6; e4m3 top 2^8
+    step = jnp.exp2((exp - 3).astype(jnp.float32))     # 3 mantissa bits
+    return jnp.clip(jnp.round(y / step) * step, -FP8_QMAX, FP8_QMAX)
+
+
+def quantize(x: jax.Array, spec: KVQuantSpec, *, axis=-1,
+             key=None) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """x -> (codes in spec.store_dtype, f32 scale without `axis`).
+
+    float kind: plain dtype cast, scale is None. int8/fp8: symmetric amax
+    scaling over `axis` (the head-dim for cache rows -> per-head,
+    per-position scales)."""
+    if not spec.quantized:
+        return x.astype(spec.store_dtype), None
+    xf = x.astype(jnp.float32)
+    scale = amax_scale(xf, spec.qmax, axis=axis)
+    y = xf / _expand(scale, axis)
+    if spec.kind == "int8":
+        return int8_round(y, key=key), scale
+    # fp8: round through the e4m3 grid. Native backends cast through the
+    # real dtype; the bf16 fallback must NOT touch jnp.float8_e4m3fn
+    # (its absence is why the fallback was selected) and rounds through
+    # the software grid instead — same numerics, see module docstring.
+    if spec.store_dtype == jnp.dtype(jnp.bfloat16):
+        return round_e4m3(y).astype(spec.store_dtype), scale
+    return y.astype(jnp.float8_e4m3fn).astype(spec.store_dtype), scale
+
+
+def dequantize(codes: jax.Array, scale: jax.Array, dtype,
+               *, axis=-1) -> jax.Array:
+    """codes * scale (f32 multiply) -> dtype. The dense-fallback /
+    reference path; the Pallas kernels fuse this multiply in-VMEM so
+    dequantized K/V are never materialized in HBM."""
+    return (codes.astype(jnp.float32)
+            * _expand(scale, axis)).astype(dtype)

@@ -17,13 +17,23 @@ cache rows every step. This kernel takes per-slot fill depths `lengths`
   against all `rep` grouped queries (a (rep, block_k) MXU matmul), instead
   of materializing rep copies of k/v like the dense jnp path.
 
+Quantized slot caches (cfg.kv_cache_dtype = int8 | fp8): k/v arrive as
+1-byte codes with per-row, per-head f32 scales `k_scale`/`v_scale`
+(B, T, Hk) riding along as two extra refs through the SAME clamped index
+map, and dequantization is FUSED into the kv-block load — `code * scale`
+happens in VMEM right before the MXU matmul, so dequantized K/V are never
+materialized in HBM and the cache read shrinks to ~1 byte/elem + 4
+scale bytes per row-head. Block skipping and scalar-prefetch clamping are
+unchanged: a skipped block skips its scale fetch too.
+
 Ring-buffer sliding-window caches need NO host-side roll and no in-kernel
 position remap: attention is permutation-invariant over the key set once
 masking is decided, and a W-slot ring at depth pos holds exactly the last
 min(pos+1, W) positions in rows {i : i < min(pos+1, W)} — i.e. the
 wraparound index remap collapses to the same `row < length` predicate as
-the linear cache (callers pass lengths = min(pos+1, W)). See
-docs/kernels.md for the bytes model.
+the linear cache (callers pass lengths = min(pos+1, W)). Scale rows wrap
+with their code rows (one shared write index), so the rule is unchanged
+under quantization. See docs/kernels.md for the bytes model.
 
 Empty slots (length 0) produce exact zeros (the engine ignores their
 logits); boundary blocks of a T % block_k != 0 cache are handled by
@@ -42,8 +52,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, block_k: int, nk: int):
+def _kernel(len_ref, q_ref, k_ref, v_ref, *rest, scale: float, block_k: int,
+            nk: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -60,6 +74,11 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         q = q_ref[0, 0].astype(jnp.float32)            # (rep, dh)
         k = k_ref[0, :, 0].astype(jnp.float32)         # (bk, dh)
         v = v_ref[0, :, 0].astype(jnp.float32)         # (bk, dh)
+        if quantized:
+            # fused dequant: codes * per-row scale, in VMEM — the f32
+            # k/v tiles never exist in HBM
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         # one kv read serves all `rep` grouped queries (fused GQA)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -86,15 +105,22 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def ragged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                             lengths: jax.Array, *,
+                            k_scale: jax.Array | None = None,
+                            v_scale: jax.Array | None = None,
                             scale: float | None = None, block_k: int = 128,
                             interpret: bool | None = None) -> jax.Array:
     """q: (B, Hk, rep, Dh) grouped queries; k, v: (B, T, Hk, Dh) slot
-    caches; lengths: (B,) int32 valid-row counts (<= T). Returns
-    (B, Hk, rep, Dh). interpret=None auto-detects from the backend
-    (compiled on TPU, interpreted on CPU)."""
+    caches; lengths: (B,) int32 valid-row counts (<= T). k_scale/v_scale:
+    optional (B, T, Hk) f32 per-row-head dequant scales for quantized
+    (int8/fp8-code) caches — dequant is fused into the kv-block load.
+    Returns (B, Hk, rep, Dh). interpret=None auto-detects from the
+    backend (compiled on TPU, interpreted on CPU)."""
     if interpret is None:
         from repro.kernels import default_interpret
         interpret = default_interpret()
+    quantized = k_scale is not None
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both k_scale and v_scale, or neither"
     B, Hk, rep, dh = q.shape
     T = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
@@ -108,14 +134,27 @@ def ragged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         last = jnp.maximum(pl.cdiv(lens[b], bk) - 1, 0)
         return (b, jnp.minimum(j, last), h, 0)
 
+    def scale_map(b, h, j, lens):
+        # same clamp as kv_map: a skipped kv block skips its scales too
+        last = jnp.maximum(pl.cdiv(lens[b], bk) - 1, 0)
+        return (b, jnp.minimum(j, last), h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, dh), lambda b, h, j, lens: (b, h, 0, 0)),
+        pl.BlockSpec((1, bk, 1, dh), kv_map),
+        pl.BlockSpec((1, bk, 1, dh), kv_map),
+    ]
+    operands = [q, k, v]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bk, 1), scale_map),
+                     pl.BlockSpec((1, bk, 1), scale_map)]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hk, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, rep, dh), lambda b, h, j, lens: (b, h, 0, 0)),
-            pl.BlockSpec((1, bk, 1, dh), kv_map),
-            pl.BlockSpec((1, bk, 1, dh), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rep, dh),
                                lambda b, h, j, lens: (b, h, 0, 0)),
         scratch_shapes=[
@@ -124,10 +163,11 @@ def ragged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((rep, dh), jnp.float32),
         ],
     )
-    kern = functools.partial(_kernel, scale=scale, block_k=bk, nk=nk)
+    kern = functools.partial(_kernel, scale=scale, block_k=bk, nk=nk,
+                             quantized=quantized)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hk, rep, dh), q.dtype),
         interpret=interpret,
-    )(lengths, q, k, v)
+    )(lengths, *operands)

@@ -59,6 +59,31 @@ def ragged_decode_ref(q, k, v, lengths, *, scale=None):
     return out.astype(q.dtype)
 
 
+def dequant_ref(codes, scale, dtype=jnp.float32):
+    """Dense reference dequant: codes (..., T, ..., Dh) * per-row scale
+    (codes.shape[:-1]) broadcast over the trailing axis. This is the
+    oracle-side materialized dequant the fused kernels avoid."""
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def ragged_decode_quant_ref(q, k, v, k_scale, v_scale, lengths, *,
+                            scale=None):
+    """Quantized-cache oracle: densely dequantize the (B, T, Hk, Dh)
+    codes with their (B, T, Hk) scales, then run the dense-masked ragged
+    oracle — exactly the HBM materialization the fused kernel avoids."""
+    return ragged_decode_ref(q, dequant_ref(k, k_scale),
+                             dequant_ref(v, v_scale), lengths, scale=scale)
+
+
+def attention_quant_ref(q, k, v, k_scale, v_scale, *, causal=True,
+                        window=0, scale=None):
+    """Quantized flash-attention oracle: k/v (BH, T, dh) codes with
+    (BH, T) scales, densely dequantized then masked-softmax attended."""
+    return attention_ref(q, dequant_ref(k, k_scale),
+                         dequant_ref(v, v_scale), causal=causal,
+                         window=window, scale=scale)
+
+
 def rwkv6_wkv_ref(r, k, v, w, u):
     """r,k,v,w: (BH, S, Dh); u: (BH, Dh)."""
     f32 = jnp.float32

@@ -29,6 +29,18 @@ Pallas decode kernel (kernels/ragged_decode_attention.py) with the fused
 AltUp predict/correct kernel in the layer loop — both with dense jnp
 fallbacks that are their test oracles.
 
+Quantized slot caches (cfg.kv_cache_dtype = int8 | fp8, see
+kernels/quant.py): attention k/v caches and MLA latent caches store
+1-byte codes plus per-head, per-position f32 scales as sibling cache
+leaves ("k_scale"/"v_scale" (n, B, T, Hk), "latent_scale" (n, B, T)).
+Quantize-on-write happens HERE — k_new/v_new are rounded as they land
+(including each chunked-prefill chunk), codes and scales share one write
+index so ring wraparound and padded-token drops stay in lockstep — and
+dequantization is fused inside the Pallas decode kernels (the dense
+fallback dequantizes in layers.attention_block and is the oracle).
+Recurrent state (rwkv/mamba) always stays float: it is re-read and
+re-written every step, so low-bit storage would accumulate rounding.
+
 A note on AltUp economics (paper Sec. 3.2): caches are built from the
 ACTIVE d-wide sub-block only, so the widened (K*d) stream adds ZERO bytes
 to the KV cache — decode memory is identical to the unwidened model.
@@ -43,6 +55,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.core import altup as alt
+from repro.kernels import quant
 from repro.models import layers as L
 from repro.models import rwkv as rwkv_lib
 from repro.models import ssm as ssm_lib
@@ -52,10 +65,27 @@ from repro.models.transformer import (Segment, act_dtype, batch_axes,
                                       unembed, embed_tokens)
 
 
+def kv_quant_spec(cfg: ModelConfig) -> quant.KVQuantSpec:
+    """Resolved cfg.kv_cache_dtype for the decode slot caches ("auto" =
+    the activation dtype — bit-identical to the unquantized path)."""
+    return quant.resolve_kv_spec(cfg.kv_cache_dtype, act_dtype(cfg))
+
+
 def init_cache(cfg: ModelConfig, B: int, T: int,
                dtype=None) -> Dict[str, Any]:
-    """Zero caches for a max sequence length T."""
+    """Zero caches for a max sequence length T.
+
+    Quantized modes (kv_cache_dtype int8/fp8) store attention k/v and MLA
+    latents as low-bit codes with sibling f32 scale leaves: k/v scales
+    are per (position, kv-head) — one scale per cached head-row — and
+    latent scales are per position (the latent is head-free). Cross-
+    attention caches (encdec) stay float: they are written once at
+    prefill and the continuous-batching path never serves encdec."""
+    spec = kv_quant_spec(cfg)
+    # ad: recurrent/conv/shift state (always float — see module doc);
+    # kd: the k/v/latent storage cfg.kv_cache_dtype selects
     ad = dtype or act_dtype(cfg)
+    kd = spec.store_dtype if spec.quantized else (dtype or spec.store_dtype)
     d, dh = cfg.d_model, cfg.resolved_head_dim
     hk = cfg.n_kv_heads
     caches: Dict[str, Any] = {}
@@ -65,14 +95,22 @@ def init_cache(cfg: ModelConfig, B: int, T: int,
             # sliding-window segments need only the last `window` keys:
             # ring buffer (wraparound handled in decode_attn)
             Tc = min(T, seg.window) if seg.window > 0 else T
-            c = {"k": jnp.zeros((n, B, Tc, hk, dh), ad),
-                 "v": jnp.zeros((n, B, Tc, hk, dh), ad)}
+            c = {"k": jnp.zeros((n, B, Tc, hk, dh), kd),
+                 "v": jnp.zeros((n, B, Tc, hk, dh), kd)}
+            if spec.quantized:
+                c["k_scale"] = jnp.zeros((n, B, Tc, hk), jnp.float32)
+                c["v_scale"] = jnp.zeros((n, B, Tc, hk), jnp.float32)
         elif seg.kind == "shared_attn":
-            c = {"k": jnp.zeros((B, T, hk, dh), ad),
-                 "v": jnp.zeros((B, T, hk, dh), ad)}
+            c = {"k": jnp.zeros((B, T, hk, dh), kd),
+                 "v": jnp.zeros((B, T, hk, dh), kd)}
+            if spec.quantized:
+                c["k_scale"] = jnp.zeros((B, T, hk), jnp.float32)
+                c["v_scale"] = jnp.zeros((B, T, hk), jnp.float32)
         elif seg.kind == "mla":
             w = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
-            c = {"latent": jnp.zeros((n, B, T, w), ad)}
+            c = {"latent": jnp.zeros((n, B, T, w), kd)}
+            if spec.quantized:
+                c["latent_scale"] = jnp.zeros((n, B, T), jnp.float32)
         elif seg.kind == "rwkv":
             H = d // cfg.rwkv.head_dim
             hd = cfg.rwkv.head_dim
@@ -122,10 +160,28 @@ def cache_pspecs(cfg: ModelConfig, caches, mesh) -> Any:
                 return P(*lead, bax, None, None, None)
             # tiny batch (long-context): sequence-parallel cache
             return P(*lead, None, ("data", "model"), None, None)
+        if name in ("k_scale", "v_scale"):
+            # quantized-cache scales mirror their code leaves minus the
+            # head-dim axis: (n, B, T, hk) stacked | (B, T, hk) shared
+            batch_dim = 1 if leaf.ndim == 4 else 0
+            lead = (None,) * batch_dim
+            B, T, hk = leaf.shape[batch_dim:batch_dim + 3]
+            b_ok = B % nb == 0
+            if b_ok and hk % msize == 0:
+                return P(*lead, bax, None, "model")
+            if b_ok and T % msize == 0:
+                return P(*lead, bax, "model", None)
+            if b_ok:
+                return P(*lead, bax, None, None)
+            return P(*lead, None, ("data", "model"), None)
         if name == "latent":                          # (n, B, T, w)
             if leaf.shape[1] % nb == 0:
                 return P(None, bax, "model", None)
             return P(None, None, ("data", "model"), None)
+        if name == "latent_scale":                    # (n, B, T)
+            if leaf.shape[1] % nb == 0:
+                return P(None, bax, "model")
+            return P(None, None, ("data", "model"))
         if name in ("wkv", "ssm"):                    # (n, B, H, ., .)
             b_ok = leaf.shape[1] % nb == 0
             h_ok = leaf.shape[2] % msize == 0
@@ -265,7 +321,8 @@ def _decode_ffn(p_l, cfg, x):
 
 
 def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
-                pinfo=None, n_valid=None, kv_len=None, use_ragged=False):
+                pinfo=None, n_valid=None, kv_len=None, use_ragged=False,
+                cache_ks=None, cache_vs=None):
     """Single-step attention using + updating the cache slice.
 
     x: (B, S, d) — S is 1 for decode ticks, the chunk size during chunked
@@ -274,12 +331,18 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
     window)): writes wrap at pos % T and key positions are reconstructed
     per slot. pinfo: hoisted decode_positions dict (decode_segment builds
     it once per segment); kv_len: static read-slice bucket; use_ragged:
-    route S=1 attention through the length-aware Pallas kernel."""
+    route S=1 attention through the length-aware Pallas kernel.
+    cache_ks/cache_vs: (B, T, Hk) f32 scale caches when kv_cache_dtype is
+    quantized — k_new/v_new are quantized as they land (per-head,
+    per-position amax scales), codes and scales share `widx` so ring
+    wraparound and padded-token drops stay in lockstep. Returns the new
+    caches as a dict."""
     T = cache_k.shape[1]
     # windows are static Segment.window ints; a traced window must fail
     # loudly here — silently treating it as full attention would write
     # past a ring-sized cache.
     ring = int(window) > 0
+    spec = kv_quant_spec(cfg)
     if pinfo is None:
         pinfo = decode_positions(pos, x.shape[1], T, ring, n_valid=n_valid,
                                  kv_len=kv_len)
@@ -294,17 +357,28 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
         k_new = L.rms_norm(k_new, p_l["attn"]["k_norm"])
     if not cfg.use_rel_pos_bias:
         k_new = L.apply_rope(k_new, q_pos, cfg.rope_theta)
+    if spec.quantized:
+        # quantize-on-write: post-RoPE keys/values -> codes + scales
+        k_new, ks_new = quant.quantize(k_new, spec)    # (B,S,Hk,dh),(B,S,Hk)
+        v_new, vs_new = quant.quantize(v_new, spec)
+        cache_ks = _update_at(cache_ks, ks_new, widx)
+        cache_vs = _update_at(cache_vs, vs_new, widx)
     cache_k = _update_at(cache_k, k_new, widx)
     cache_v = _update_at(cache_v, v_new, widx)
     # read slice: O(bucket) bytes, not O(T) — rows past the kv-len bucket
     # are allocated-but-unwritten (masked anyway) and never touched
     kr = cache_k[:, :Tb] if Tb < T else cache_k
     vr = cache_v[:, :Tb] if Tb < T else cache_v
+    kv_scales = None
+    if spec.quantized:
+        kv_scales = (cache_ks[:, :Tb] if Tb < T else cache_ks,
+                     cache_vs[:, :Tb] if Tb < T else cache_vs)
     lengths = jnp.broadcast_to(pinfo["lengths"], (x.shape[0],)) \
         if use_ragged else None
     a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
                              q_pos=q_pos, k_pos=k_pos,
-                             kv=(kr, vr), ragged_lengths=lengths)
+                             kv=(kr, vr), ragged_lengths=lengths,
+                             kv_scales=kv_scales)
     x = x + a
     if cross is not None:
         cp, ck, cv = cross
@@ -314,26 +388,45 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
                                  q_pos=q_pos, k_pos=jnp.arange(ck.shape[1]),
                                  kv=(ck, cv), causal=False)
         x = x + c
-    return _decode_ffn(p_l, cfg, x), cache_k, cache_v
+    new_cache = {"k": cache_k, "v": cache_v}
+    if spec.quantized:
+        new_cache["k_scale"] = cache_ks
+        new_cache["v_scale"] = cache_vs
+    return _decode_ffn(p_l, cfg, x), new_cache
 
 
 def decode_mla(p_l, cfg, x, cache_lat, pos, pinfo=None, n_valid=None,
-               kv_len=None):
+               kv_len=None, cache_lat_s=None):
     """pos: scalar or per-slot (B,). MLA caches are always linear (full
-    attention); the latent read is bucket-sliced like the k/v caches."""
+    attention); the latent read is bucket-sliced like the k/v caches.
+    Quantized mode stores latent codes + a per-position scale (the latent
+    is head-free, so one scale per cached row); the absorbed-matrix
+    attention consumes the densely-dequantized slice (no MLA Pallas
+    kernel — the dequant IS the reference path). Returns (out, cache
+    dict)."""
     T = cache_lat.shape[1]
+    spec = kv_quant_spec(cfg)
     if pinfo is None:
         pinfo = decode_positions(pos, x.shape[1], T, False, n_valid=n_valid,
                                  kv_len=kv_len)
     q_pos, widx, Tb = pinfo["q_pos"], pinfo["widx"], pinfo["Tb"]
     h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
     lat_new = L.mla_latent(p_l["attn"], cfg, h, k_pos=q_pos)  # (B,S,w)
+    if spec.quantized:
+        lat_new, ls_new = quant.quantize(lat_new, spec)       # scale (B,S)
+        cache_lat_s = _update_at(cache_lat_s, ls_new, widx)
     cache_lat = _update_at(cache_lat, lat_new, widx)
     latr = cache_lat[:, :Tb] if Tb < T else cache_lat
+    if spec.quantized:
+        lsr = cache_lat_s[:, :Tb] if Tb < T else cache_lat_s
+        latr = quant.dequantize(latr, lsr, x.dtype)
     a = L.mla_attention(p_l["attn"], cfg, h, latr, q_pos=q_pos,
                         k_pos=pinfo["k_pos"])
     x = x + a
-    return _decode_ffn(p_l, cfg, x), cache_lat
+    new_cache = {"latent": cache_lat}
+    if spec.quantized:
+        new_cache["latent_scale"] = cache_lat_s
+    return _decode_ffn(p_l, cfg, x), new_cache
 
 
 def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
@@ -362,10 +455,12 @@ def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
 
     if seg.kind == "shared_attn":
         def layer_fn(xa):
-            out, ck, cv = decode_attn(p_seg, cfg, xa, cache["k"], cache["v"],
-                                      pos, seg.window, pinfo=pinfo,
-                                      use_ragged=use_ragged)
-            layer_fn.new_cache = {"k": ck, "v": cv}
+            out, nc = decode_attn(p_seg, cfg, xa, cache["k"], cache["v"],
+                                  pos, seg.window, pinfo=pinfo,
+                                  use_ragged=use_ragged,
+                                  cache_ks=cache.get("k_scale"),
+                                  cache_vs=cache.get("v_scale"))
+            layer_fn.new_cache = nc
             return out
         if cfg.altup.enabled:
             sel = alt.block_selector(seg.layer_offset, K, cfg.altup.selection)
@@ -391,15 +486,18 @@ def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
                 cross = None
                 if cross_l is not None:
                     cross = (cross_l[0], cross_l[1]["k"], cross_l[1]["v"])
-                out, ck, cv = decode_attn(p_l, cfg, xa, cache_l["k"],
-                                          cache_l["v"], pos, window,
-                                          cross=cross, pinfo=pinfo,
-                                          use_ragged=use_ragged)
-                box["cache"] = {"k": ck, "v": cv}
+                out, nc = decode_attn(p_l, cfg, xa, cache_l["k"],
+                                      cache_l["v"], pos, window,
+                                      cross=cross, pinfo=pinfo,
+                                      use_ragged=use_ragged,
+                                      cache_ks=cache_l.get("k_scale"),
+                                      cache_vs=cache_l.get("v_scale"))
+                box["cache"] = nc
             elif seg.kind == "mla":
-                out, lat = decode_mla(p_l, cfg, xa, cache_l["latent"], pos,
-                                      pinfo=pinfo)
-                box["cache"] = {"latent": lat}
+                out, nc = decode_mla(p_l, cfg, xa, cache_l["latent"], pos,
+                                     pinfo=pinfo,
+                                     cache_lat_s=cache_l.get("latent_scale"))
+                box["cache"] = nc
             elif seg.kind == "rwkv":
                 state = {"wkv": cache_l["wkv"],
                          "shift_tm": cache_l["shift_tm"],
@@ -474,21 +572,37 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
 # k/v/latent leaves self-clean: a recycled slot rewrites positions
 # 0..pos sequentially and the causal mask hides everything beyond.
 _RECURRENT_LEAVES = ("wkv", "shift_tm", "shift_cm", "ssm", "conv")
+# Quantized-cache scale leaves are cleared too: rows < the new request's
+# fill depth are rewritten anyway, but zeroing the rest makes every
+# stale row dequantize to exact 0 (scale 0), so a recycled slot can
+# never leak another request's magnitudes through a bad lengths bug and
+# a NaN/Inf scale from an aborted request cannot survive recycling.
+_SCALE_LEAVES = ("k_scale", "v_scale", "latent_scale")
 
 
 def reset_slot(caches, slot):
-    """Zero one slot's recurrent state (rwkv/mamba) across all segments.
+    """Zero one slot's recurrent state (rwkv/mamba) and any quantized-
+    cache scale leaves across all segments.
 
     slot: scalar int32 (traced OK — jit this with donated caches). Attn
-    and MLA caches are left untouched; per-slot position masking makes
-    their stale rows unreachable."""
+    and MLA code/float caches are left untouched; per-slot position
+    masking makes their stale rows unreachable."""
 
     def reset(path, leaf):
         name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        if name not in _RECURRENT_LEAVES:
-            return leaf
-        # all recurrent leaves are stacked (n, B, ...): batch axis 1
-        return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))
+        if name in _RECURRENT_LEAVES:
+            # all recurrent leaves are stacked (n, B, ...): batch axis 1
+            return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))
+        if name in _SCALE_LEAVES:
+            # stacked (n, B, T, hk) / (n, B, T) — except the shared-attn
+            # block's k/v scales, which are unstacked (B, T, hk): the
+            # stacked k/v scales are 4-D and latent_scale is always
+            # stacked, so ndim + name disambiguates the batch axis
+            stacked = name == "latent_scale" or leaf.ndim == 4
+            if stacked:
+                return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))
+            return leaf.at[slot].set(jnp.zeros_like(leaf[slot]))
+        return leaf
 
     return jax.tree_util.tree_map_with_path(reset, caches)
 

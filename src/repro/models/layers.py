@@ -168,7 +168,8 @@ def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
                     window, q_pos, k_pos, kv: Optional[tuple] = None,
                     x_kv: Optional[jax.Array] = None, bias=None,
                     causal: Optional[bool] = None, banded: bool = False,
-                    ragged_lengths: Optional[jax.Array] = None):
+                    ragged_lengths: Optional[jax.Array] = None,
+                    kv_scales: Optional[tuple] = None):
     """Full attention sub-block (no residual, no pre-norm — caller owns those).
 
     Returns (out, (k, v)) so callers can populate KV caches.
@@ -179,6 +180,11 @@ def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
     The caller guarantees row `t` of the cache is valid iff t < length —
     this subsumes causal, per-slot-depth AND ring-window masking, which is
     why no q_pos/k_pos reach the kernel.
+    kv_scales: (k_scale, v_scale) (B, T, Hk) f32 — `kv` holds quantized
+    codes (int8/fp8, cfg.kv_cache_dtype). The ragged kernel fuses the
+    dequant into its kv-block load; every other path (chunked prefill
+    S > 1, dense fallback on interpret backends) dequantizes here and is
+    the kernel's oracle.
     """
     dh = cfg.resolved_head_dim
     causal = cfg.causal if causal is None else causal
@@ -189,6 +195,7 @@ def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
     if use_rope:
         q = apply_rope(q, q_pos, cfg.rope_theta)
     if kv is None:
+        assert kv_scales is None, "kv_scales requires a precomputed kv"
         src = x if x_kv is None else x_kv
         k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
         v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
@@ -205,12 +212,21 @@ def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
                   and x_kv is None)
     if use_ragged:
         from repro.kernels import ops as kops
-        out = kops.ragged_decode_attn(q, k, v, ragged_lengths)
-    elif use_banded:
-        out = sdpa_local_banded(q, k, v, window=window)
+        if kv_scales is not None:
+            out = kops.ragged_decode_attn(q, k, v, ragged_lengths,
+                                          kv_scales[0], kv_scales[1])
+        else:
+            out = kops.ragged_decode_attn(q, k, v, ragged_lengths)
     else:
-        out = sdpa(q, k, v, causal=causal, window=window,
-                   q_pos=q_pos, k_pos=k_pos, bias=bias)
+        if kv_scales is not None:
+            from repro.kernels import quant
+            k = quant.dequantize(k, kv_scales[0], x.dtype)
+            v = quant.dequantize(v, kv_scales[1], x.dtype)
+        if use_banded:
+            out = sdpa_local_banded(q, k, v, window=window)
+        else:
+            out = sdpa(q, k, v, causal=causal, window=window,
+                       q_pos=q_pos, k_pos=k_pos, bias=bias)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, (k, v)
 

@@ -6,6 +6,11 @@ data axes so the all-reduce moves compressed payloads.
 Error feedback (Stich et al.): the residual (g - compress(g)) is carried
 to the next step so compression bias vanishes in expectation — tested by
 the property suite (error-feedback accumulator keeps sum(g) unbiased).
+
+The int8 scale/rounding logic is shared with the quantized KV-cache
+serving path — one copy in kernels/quant.py: gradients use a single
+global scale + stochastic rounding (unbiasedness matters), cache rows use
+per-head, per-position scales + round-to-nearest (determinism matters).
 """
 from __future__ import annotations
 
@@ -13,6 +18,8 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import quant
 
 
 def topk_compress(g: jax.Array, frac: float) -> Tuple[jax.Array, jax.Array]:
@@ -32,18 +39,16 @@ def topk_decompress(vals, idx, shape, dtype) -> jax.Array:
 
 
 def int8_quantize(g: jax.Array, key) -> Tuple[jax.Array, jax.Array]:
-    """Stochastic-rounding int8: returns (q int8, scale)."""
-    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
-    x = g / scale
-    lo = jnp.floor(x)
-    p = x - lo
-    r = jax.random.uniform(key, g.shape)
-    q = (lo + (r < p)).astype(jnp.int8)
+    """Stochastic-rounding int8 (one global scale): returns (q int8,
+    scale). Scale/rounding shared with the KV-cache path via
+    kernels/quant.py."""
+    scale = quant.amax_scale(g, quant.INT8_QMAX, axis=None)
+    q = quant.int8_round(g.astype(jnp.float32) / scale, key=key)
     return q, scale
 
 
 def int8_dequantize(q, scale, dtype) -> jax.Array:
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+    return quant.dequantize(q, scale, dtype, axis=None)
 
 
 def compressed_psum(g: jax.Array, err: jax.Array, axis_name, *,

@@ -149,8 +149,27 @@ def memory_dict(compiled) -> Dict[str, float]:
     return out
 
 
+# KV-cache storage bytes per element by cfg.kv_cache_dtype. fp8 is
+# modeled at 1 byte — the TARGET-hardware bytes — even where storage
+# falls back to the bf16 simulation (kernels/quant.fp8_native).
+KV_DTYPE_BYTES = {"float32": 4, "bf16": 2, "bfloat16": 2, "float16": 2,
+                  "int8": 1, "fp8": 1}
+_QUANTIZED_KV = ("int8", "fp8")
+# per-row scale overhead of the quantized layouts: one f32 scale per
+# (position, kv-head) for k and v each, one per position for MLA latents
+SCALE_BYTES = 4
+
+
+def resolve_kv_dtype_name(cfg) -> str:
+    """cfg.kv_cache_dtype with "auto" resolved to the activation dtype's
+    name (the storage the cache actually uses today)."""
+    name = getattr(cfg, "kv_cache_dtype", "auto")
+    return cfg.dtype if name == "auto" else name
+
+
 def decode_kv_bytes(cfg, lengths, *, T: int, dtype_bytes: int = 2,
-                    ragged: bool = True) -> float:
+                    ragged: bool = True,
+                    kv_dtype: Optional[str] = None) -> float:
     """KV-cache bytes READ by one decode step's attention, whole model.
 
     The dense path scores every slot against the entire allocated cache:
@@ -162,21 +181,36 @@ def decode_kv_bytes(cfg, lengths, *, T: int, dtype_bytes: int = 2,
     al. 2022). Ring (sliding-window) segments cap a slot's row count at
     the window size on BOTH paths (their caches are allocated O(window)).
 
+    kv_dtype: a cfg.kv_cache_dtype name ("auto" | "float32" | "bf16" |
+    "int8" | "fp8"; also accepts raw dtype names like "bfloat16") — sets
+    the per-element bytes AND, for the quantized kinds, adds the f32
+    scale bytes each cache row drags along (per kv-head for k/v, per
+    position for MLA latents). None keeps the legacy `dtype_bytes`
+    behavior (no scale term). The two knobs multiply the SAME row-count
+    model, so the dtype column of BENCH_decode.json is directly
+    comparable to the fill-fraction one.
+
     lengths: per-slot fill depths (iterable of ints). Returns bytes/step;
     divide by len(lengths) for bytes/token at one-token-per-slot decode.
     """
     from repro.models.transformer import layer_plan  # lazy: no cycle
+    scale_b = 0
+    if kv_dtype is not None:
+        if kv_dtype == "auto":
+            kv_dtype = resolve_kv_dtype_name(cfg)
+        dtype_bytes = KV_DTYPE_BYTES[kv_dtype]
+        scale_b = SCALE_BYTES if kv_dtype in _QUANTIZED_KV else 0
     lengths = list(int(x) for x in lengths)
     B = len(lengths)
     hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
     total = 0.0
     for seg in layer_plan(cfg):
         if seg.kind in ("attn", "shared_attn"):
-            row = 2 * hk * dh * dtype_bytes               # k + v
+            row = 2 * hk * (dh * dtype_bytes + scale_b)   # k + v (+scales)
             cap = min(T, seg.window) if seg.window > 0 else T
         elif seg.kind == "mla":
             row = (cfg.mla.kv_lora_rank
-                   + cfg.mla.qk_rope_head_dim) * dtype_bytes
+                   + cfg.mla.qk_rope_head_dim) * dtype_bytes + scale_b
             cap = T
         else:                                             # recurrent: O(1)
             continue

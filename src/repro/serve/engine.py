@@ -26,7 +26,12 @@ cache read to a host-computed power-of-two `kv-len bucket` >= the deepest
 slot (a STATIC slice — a handful of jit specializations instead of O(T)
 reads at every depth), and (b) on TPU route S=1 attention through the
 ragged Pallas decode kernel, which additionally skips kv blocks past each
-individual slot's depth. Chunked prefill is automatically disabled
+individual slot's depth. With cfg.kv_cache_dtype = int8/fp8 the slot
+caches hold 1-byte codes + per-head, per-position scales: prefill chunks
+quantize as they land (the same decode_step cache writes), the ragged
+kernel dequantizes in-VMEM, and each byte of those O(len) reads shrinks
+2-4x — the lever that fits 2-4x more concurrent slots in the same HBM
+budget (see docs/serving.md). Chunked prefill is automatically disabled
 (chunk=1) for recurrent (rwkv/mamba) and ring-cache (sliding-window)
 models: recurrent state must advance token-by-token, and a ring write of
 a whole chunk would overwrite keys earlier chunk tokens still need.
@@ -48,8 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models.decode import (decode_step, init_cache, prefill,
-                                 reset_slot)
+from repro.models.decode import (decode_step, init_cache, kv_quant_spec,
+                                 prefill, reset_slot)
 from repro.serve.scheduler import SlotScheduler
 
 
@@ -136,6 +141,11 @@ class Engine:
         plan = layer_plan(self.cfg)
         self._has_recurrent = any(s.kind in ("rwkv", "mamba")
                                   for s in plan)
+        # quantized caches also reset at admission: reset_slot zeroes the
+        # slot's scale leaves so stale rows dequantize to exact 0 and a
+        # NaN/Inf scale from an aborted request cannot survive recycling
+        self._admit_reset = (self._has_recurrent
+                             or kv_quant_spec(self.cfg).quantized)
         has_ring = any(s.kind in ("attn", "shared_attn") and s.window > 0
                        for s in plan)
         # chunked prefill needs token-order-free cache writes: recurrent
@@ -171,8 +181,9 @@ class Engine:
         for st in self._sched.admit():
             # recycled slots keep stale attention rows (masked out by the
             # per-slot position), but recurrent rwkv/mamba state carries
-            # over and must be zeroed.
-            if self._has_recurrent:
+            # over and must be zeroed — and quantized-cache scale leaves
+            # are cleared so stale rows dequantize to exact zeros.
+            if self._admit_reset:
                 self._caches = self._reset(self._caches, st.slot)
         active = dict(self._sched.active)
         if not active:

@@ -156,6 +156,185 @@ def test_ragged_kernel_ring_window_wraparound():
                                rtol=2e-5, atol=2e-5)
 
 
+# --------------------------------------------------------------------------
+# quantized KV caches: fused-dequant kernels vs dense dequant oracles
+# --------------------------------------------------------------------------
+
+def _quant_cache(k, v, kind):
+    """Quantize a (B, T, Hk, Dh) slot cache the way decode.py writes it:
+    per-(position, head) scales over the head dim."""
+    from repro.kernels import quant
+    spec = quant.resolve_kv_spec(kind, k.dtype)
+    kq, ksc = quant.quantize(k, spec)
+    vq, vsc = quant.quantize(v, spec)
+    return kq, vq, ksc, vsc
+
+
+@pytest.mark.parametrize("kind", ["int8", "fp8"])
+@pytest.mark.parametrize("B,T,Hk,rep,dh,bk", [
+    (4, 96, 2, 2, 32, 32),      # GQA 2:1
+    (3, 128, 1, 4, 64, 64),     # GQA 4:1, single kv head
+    (5, 100, 2, 2, 16, 32),     # odd T % block_k
+])
+def test_ragged_decode_kernel_quant_sweep(kind, B, T, Hk, rep, dh, bk):
+    """Fused in-kernel dequant == dense dequant-then-attend oracle, for
+    int8 codes and fp8 (e4m3-grid) codes, through the same clamped
+    scalar-prefetch index maps."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hk, rep, dh))
+    k = jax.random.normal(ks[1], (B, T, Hk, dh))
+    v = jax.random.normal(ks[2], (B, T, Hk, dh))
+    kq, vq, ksc, vsc = _quant_cache(k, v, kind)
+    lens = _slot_lengths(B, T, seed=B)
+    got = ragged_raw(q, kq, vq, lens, k_scale=ksc, v_scale=vsc,
+                     block_k=bk, interpret=True)
+    want = ref.ragged_decode_quant_ref(q, kq, vq, ksc, vsc, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ragged_quant_wrapper_and_tolerance_vs_fp32():
+    """ops-layer quantized dispatch: (a) exact vs the dense dequant
+    oracle, (b) within the documented int8 tolerance of the UNquantized
+    fp32 attention (docs/serving.md: per-head-row amax int8 keeps decode
+    attention within ~1e-2 of fp32)."""
+    from repro.models.layers import sdpa
+    B, T, H, Hk, dh = 4, 64, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh))
+    k = jax.random.normal(ks[1], (B, T, Hk, dh))
+    v = jax.random.normal(ks[2], (B, T, Hk, dh))
+    kq, vq, ksc, vsc = _quant_cache(k, v, "int8")
+    lens = jnp.asarray([1, 17, 40, 64], jnp.int32)
+    got = ops.ragged_decode_attn(q, kq, vq, lens, ksc, vsc, block_k=32)
+    rep = H // Hk
+    want_q = ref.ragged_decode_quant_ref(
+        q[:, 0].reshape(B, Hk, rep, dh), kq, vq, ksc, vsc, lens
+    ).reshape(B, 1, H, dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_q),
+                               rtol=2e-5, atol=2e-5)
+    want_fp32 = sdpa(q, k, v, causal=True, window=None,
+                     q_pos=(lens - 1)[:, None], k_pos=jnp.arange(T))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_fp32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("kind", ["int8", "fp8"])
+@pytest.mark.parametrize("causal,window,bq,bk", [
+    (True, 0, 64, 64),
+    (True, 48, 32, 64),
+    (False, 0, 64, 64),
+])
+def test_flash_attention_quant_sweep(kind, causal, window, bq, bk):
+    """Quantized prefill flash kernel: fused dequant through the
+    block-skip remapped index maps == dense dequant oracle."""
+    from repro.kernels import quant
+    BH, S, dh = 3, 128, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (BH, S, dh))
+    k = jax.random.normal(ks[1], (BH, S, dh))
+    v = jax.random.normal(ks[2], (BH, S, dh))
+    spec = quant.resolve_kv_spec(kind, k.dtype)
+    kq, ksc = quant.quantize(k, spec)
+    vq, vsc = quant.quantize(v, spec)
+    got = fa_raw(q, kq, vq, k_scale=ksc, v_scale=vsc, causal=causal,
+                 window=window, block_q=bq, block_k=bk, interpret=True)
+    want = ref.attention_quant_ref(q, kq, vq, ksc, vsc, causal=causal,
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_quant_gqa_wrapper():
+    """ops.mha_flash with quantized k/v: scales ride the GQA expansion."""
+    B, S, H, Hk, dh = 2, 128, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, Hk, dh))
+    v = jax.random.normal(ks[2], (B, S, Hk, dh))
+    kq, vq, ksc, vsc = _quant_cache(k, v, "int8")
+    got = ops.mha_flash(q, kq, vq, ksc, vsc, causal=True,
+                        block_q=64, block_k=64)
+    from repro.kernels import quant
+    kd = quant.dequantize(kq, ksc, jnp.float32)
+    vd = quant.dequantize(vq, vsc, jnp.float32)
+    want = ops.mha_flash(q, kd, vd, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_quant_software_e4m3_matches_native_cast():
+    """round_e4m3 (the simulated-fp8 fallback for backends without the
+    dtype) lands on the e4m3 grid and agrees with the native
+    float8_e4m3fn cast to within one grid step. (Bit-exact agreement is
+    impossible to demand: XLA's CPU f32->f8 cast double-rounds through
+    an f16 intermediate, flipping ~0.3% of near-tie values by one ulp;
+    round_e4m3 single-rounds, which is the truer e4m3.)"""
+    from repro.kernels import quant
+    yv = jnp.concatenate([
+        jax.random.normal(KEY, (4096,)) * 100.0,     # normals
+        jax.random.normal(jax.random.fold_in(KEY, 1), (1024,)) * 1e-3,
+        jnp.asarray([0.0, 448.0, -448.0, 460.0, -460.0, 2.0 ** -9,
+                     2.0 ** -10, -2.0 ** -6]),
+    ])
+    got = np.asarray(quant.round_e4m3(yv))
+    want = np.asarray(yv.astype(jnp.float8_e4m3fn).astype(jnp.float32))
+    # every software-rounded value is itself on the e4m3 grid
+    np.testing.assert_array_equal(
+        np.asarray(jnp.asarray(got).astype(jnp.float8_e4m3fn)
+                   .astype(jnp.float32)), got)
+    # and within one grid step (|y|/8, floored at the subnormal step)
+    ulp = np.maximum(np.abs(np.asarray(yv)) / 8.0, 2.0 ** -9)
+    assert (np.abs(got - want) <= ulp + 1e-12).all()
+    # exact wherever the native cast did not hit a double-rounding tie
+    assert (got == want).mean() > 0.99
+
+
+@pytest.mark.parametrize("kind,bound", [("int8", 1.0 / 127.0),
+                                        ("fp8", 1.0 / 8.0)])
+def test_quant_roundtrip_error_bound(kind, bound):
+    """Dequant(quantize(x)) error is bounded by the per-row scale: half
+    an int8 step, or the e4m3 relative step (2^-3) of the row amax."""
+    from repro.kernels import quant
+    x = jax.random.normal(KEY, (5, 33, 3, 24))
+    spec = quant.resolve_kv_spec(kind, x.dtype)
+    codes, scale = quant.quantize(x, spec)
+    back = quant.dequantize(codes, scale, jnp.float32)
+    amax = np.asarray(jnp.max(jnp.abs(x), axis=-1, keepdims=True))
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= bound * amax + 1e-6).all(), err.max()
+
+
+def test_quant_float_kinds_are_pure_casts():
+    """float32/bf16/auto KVQuantSpecs quantize to a plain dtype cast with
+    no scale tensor — the bit-identical legacy storage path."""
+    from repro.kernels import quant
+    x = jax.random.normal(KEY, (4, 8))
+    for name, want_dtype in [("auto", jnp.float32),
+                             ("float32", jnp.float32),
+                             ("bf16", jnp.bfloat16)]:
+        spec = quant.resolve_kv_spec(name, jnp.float32)
+        assert not spec.quantized
+        codes, scale = quant.quantize(x, spec)
+        assert scale is None and codes.dtype == want_dtype
+        if want_dtype == jnp.float32:
+            np.testing.assert_array_equal(np.asarray(codes), np.asarray(x))
+
+
+def test_quant_shared_with_gradient_compression():
+    """optim/compression's int8 path goes through the same kernels/quant
+    scale + rounding helpers (one copy of the logic): deterministic parts
+    agree and the stochastic round stays within one step."""
+    from repro.kernels import quant
+    from repro.optim.compression import int8_dequantize, int8_quantize
+    g = jax.random.normal(KEY, (257,)) * 3.0
+    q, scale = int8_quantize(g, jax.random.PRNGKey(3))
+    want_scale = quant.amax_scale(g, quant.INT8_QMAX, axis=None)
+    np.testing.assert_allclose(float(scale), float(want_scale))
+    back = int8_dequantize(q, scale, jnp.float32)
+    assert np.abs(np.asarray(back - g)).max() <= float(scale) * 1.0 + 1e-6
+
+
 def test_flash_block_skip_boundaries():
     """Block-skipping (causal + window pl.when grids) is output-invariant
     across block shapes, including windows that cross block bounds."""

@@ -1,0 +1,276 @@
+"""Quantized KV-cache serving oracles (cfg.kv_cache_dtype).
+
+Three layers of guarantee:
+
+1. EXACTNESS WITHIN A MODE — continuous batching must stay token-
+   identical to static generate() under quantized caches: both paths
+   quantize the same post-RoPE k/v rows with the same deterministic
+   round-to-nearest, so slot recycling, ring wraparound, chunked
+   prefill and kv-bucket slicing may not change a single code or scale.
+2. ACCURACY ACROSS MODES — quantized-cache decode logits stay within a
+   DOCUMENTED tolerance of the fp32 oracle (docs/serving.md): per-head,
+   per-position amax int8 ≤ ~1% of logit magnitude (INT8_LOGIT_ATOL),
+   fp8-e4m3 ≤ ~5% (FP8_LOGIT_ATOL), measured on the four serving oracle
+   configs (dense, GQA, ring-window, MoE).
+3. NO-OP MODES ARE NO-OPS — "float32" and "bf16" must be BIT-identical
+   to "auto" on models whose activation dtype already matches: the
+   quantization plumbing may not perturb the legacy path at all.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (AltUpConfig, MLAConfig, ModelConfig, MoEConfig,
+                          SSMConfig)
+from repro.models.decode import init_cache, prefill, reset_slot
+from repro.models.transformer import init_params
+from repro.serve.engine import Engine
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = ModelConfig(name="qsrv", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                  altup=AltUpConfig(K=2))
+
+# the four serving oracle configs of the quantized-cache acceptance
+# criteria (dense, GQA, ring-window, MoE), plus kernel-forced variants
+# (ragged_decode_attn=True runs the fused-dequant Pallas kernel in
+# interpret mode on CPU) and an MLA latent-quantization config.
+BASE_CFGS = {
+    "dense": CFG,
+    "gqa": CFG.replace(name="qsrv-gqa", n_heads=4, n_kv_heads=2),
+    "ring": CFG.replace(name="qsrv-win", window_size=4),
+    "moe": ModelConfig(name="qsrv-moe", family="moe", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, altup=AltUpConfig(K=2),
+                       moe=MoEConfig(num_experts=4, top_k=2, d_expert=32)),
+}
+KERNEL_CFGS = {
+    f"{k}-kernel": v.replace(name=v.name + "-rg", ragged_decode_attn=True)
+    for k, v in BASE_CFGS.items() if k != "moe"
+}
+# hybrid: the UNSTACKED shared-attention block's quantized cache
+# ((B, T, Hk) scale leaves, no layer axis) + mamba recurrent reset
+HYBRID_CFG = ModelConfig(name="qsrv-hyb", family="hybrid", n_layers=3,
+                         d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                         vocab_size=128, altup=AltUpConfig(K=2),
+                         ssm=SSMConfig(d_state=8, d_conv=4, expand=2,
+                                       head_dim=16, shared_every=2))
+MLA_CFG = ModelConfig(name="qsrv-mla", family="mla_moe", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=128, altup=AltUpConfig(K=2),
+                      mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8,
+                                    qk_nope_head_dim=8, qk_rope_head_dim=4,
+                                    v_head_dim=8),
+                      moe=MoEConfig(num_experts=4, top_k=2, d_expert=32,
+                                    first_dense_layers=1, dense_d_ff=64))
+
+# documented quantized-vs-fp32 logit tolerances (absolute, on logit
+# magnitudes of O(1); see docs/serving.md "choosing kv_cache_dtype" —
+# measured deviations on these configs are <= 0.03 / 0.1)
+INT8_LOGIT_ATOL = 0.05
+FP8_LOGIT_ATOL = 0.25
+
+
+def _prompts(cfg, n=4, seed=0):
+    return [np.asarray(jax.random.randint(jax.random.fold_in(KEY, seed + i),
+                                          (3 + 2 * i,), 0, cfg.vocab_size))
+            for i in range(n)]
+
+
+def _static_oracle(cfg, params, prompts, n_news):
+    eng = Engine(cfg, params, max_len=32)
+    return [np.asarray(eng.generate(jnp.asarray(p)[None], n))
+            .ravel().tolist() for p, n in zip(prompts, n_news)]
+
+
+@pytest.mark.parametrize("name", list(BASE_CFGS) + list(KERNEL_CFGS)
+                         + ["mla", "hybrid"])
+@pytest.mark.parametrize("kind", ["int8", "fp8"])
+def test_continuous_matches_static_quantized(name, kind):
+    """Continuous submit/step/collect == independent static generate(),
+    token-for-token, with quantized slot caches — staggered arrivals,
+    2 slots for 4 requests (recycling), ring wraparound, drop-free MoE,
+    the unstacked shared-block cache (hybrid), and (for *-kernel) the
+    fused-dequant ragged Pallas kernel."""
+    cfg = {**BASE_CFGS, **KERNEL_CFGS, "mla": MLA_CFG,
+           "hybrid": HYBRID_CFG}[name]
+    cfg = cfg.replace(kv_cache_dtype=kind)
+    params = init_params(KEY, cfg)
+    prompts = _prompts(cfg)
+    n_news = [3, 5, 2, 4]
+    want = _static_oracle(cfg, params, prompts, n_news)
+
+    eng = Engine(cfg, params, max_len=32, n_slots=2)
+    rids = [eng.submit(prompts[0], n_news[0]),
+            eng.submit(prompts[1], n_news[1])]
+    eng.step()
+    eng.step()
+    rids.append(eng.submit(prompts[2], n_news[2]))
+    eng.step()
+    rids.append(eng.submit(prompts[3], n_news[3]))
+    out = eng.run()
+    got = [out[r] for r in rids]
+    assert got == want, (name, kind, got, want)
+
+
+@pytest.mark.parametrize("name", list(BASE_CFGS))
+@pytest.mark.parametrize("kind,atol", [("int8", INT8_LOGIT_ATOL),
+                                       ("fp8", FP8_LOGIT_ATOL)])
+def test_quantized_logits_within_documented_tolerance(name, kind, atol):
+    """Quantized-cache decode logits vs the fp32-cache oracle: within
+    the tolerance documented in docs/serving.md, on all four serving
+    oracle configs."""
+    cfg = BASE_CFGS[name]
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 9), (2, 10), 0,
+                              cfg.vocab_size)
+    lg_f, _ = prefill(params, cfg, toks, T=16)
+    lg_q, _ = prefill(params, cfg.replace(kv_cache_dtype=kind), toks, T=16)
+    V = cfg.vocab_size
+    np.testing.assert_allclose(np.asarray(lg_q[..., :V]),
+                               np.asarray(lg_f[..., :V]),
+                               rtol=0.0, atol=atol)
+
+
+@pytest.mark.parametrize("mode,act", [("float32", "float32"),
+                                      ("bf16", "bfloat16")])
+def test_explicit_float_modes_bit_identical_to_auto(mode, act):
+    """kv_cache_dtype="float32"/"bf16" on a model whose activation dtype
+    already matches is a no-op: logits are BIT-identical to "auto"
+    (today's behavior) and the generated tokens agree exactly."""
+    cfg = CFG.replace(name=f"qsrv-{mode}", dtype=act)
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 5), (2, 8), 0,
+                              cfg.vocab_size)
+    lg_auto, _ = prefill(params, cfg, toks, T=16)
+    lg_mode, _ = prefill(params, cfg.replace(kv_cache_dtype=mode), toks,
+                         T=16)
+    assert lg_auto.dtype == lg_mode.dtype
+    np.testing.assert_array_equal(
+        np.asarray(lg_auto, np.float32), np.asarray(lg_mode, np.float32))
+
+    eng_a = Engine(cfg, params, max_len=32, n_slots=2)
+    eng_m = Engine(cfg.replace(kv_cache_dtype=mode), params, max_len=32,
+                   n_slots=2)
+    prompt = np.asarray(toks[0, :6])
+    ra, rm = eng_a.submit(prompt, 4), eng_m.submit(prompt, 4)
+    assert eng_a.run()[ra] == eng_m.run()[rm]
+
+
+def test_chunked_prefill_quantizes_as_it_lands():
+    """Prefill chunks quantize on write through the same decode_step
+    cache updates: every chunk size produces the same codes/scales, so
+    outputs are chunk-invariant (and == static) under int8."""
+    cfg = CFG.replace(name="qsrv-chunk", kv_cache_dtype="int8")
+    params = init_params(KEY, cfg)
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(KEY, 50 + i),
+                                             (ln,), 0, cfg.vocab_size))
+               for i, ln in enumerate([11, 3, 17, 6])]
+    n_news = [4, 8, 3, 5]
+    want = _static_oracle(cfg, params, prompts, n_news)
+    for chunk in (1, 4, 8):
+        eng = Engine(cfg, params, max_len=32, n_slots=2,
+                     prefill_chunk=chunk)
+        rids = [eng.submit(p, n) for p, n in zip(prompts, n_news)]
+        out = eng.run()
+        assert [out[r] for r in rids] == want, chunk
+
+
+def test_kv_bucket_slicing_exact_under_int8():
+    """The static kv-len bucket read slice still changes bytes touched,
+    never tokens, when the sliced cache is quantized."""
+    cfg = CFG.replace(name="qsrv-bkt", kv_cache_dtype="int8")
+    params = init_params(KEY, cfg)
+    prompt = np.asarray(jax.random.randint(KEY, (6,), 0, cfg.vocab_size))
+    outs = []
+    for kv_buckets in (True, False):
+        eng = Engine(cfg, params, max_len=64, n_slots=2,
+                     kv_buckets=kv_buckets)
+        rid = eng.submit(prompt, 5)
+        outs.append(eng.run()[rid])
+    assert outs[0] == outs[1]
+
+
+def test_quantized_cache_layout_and_reset_clears_scales():
+    """int8 caches hold 1-byte codes + per-(position, head) f32 scale
+    leaves; reset_slot zeroes exactly the reset slot's scales (stale
+    rows then dequantize to exact 0) and leaves other slots alone."""
+    cfg = CFG.replace(kv_cache_dtype="int8")
+    caches = init_cache(cfg, B=3, T=16)
+    c0 = caches["seg0"]
+    hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    assert c0["k"].dtype == jnp.int8 and c0["v"].dtype == jnp.int8
+    assert c0["k_scale"].shape == c0["k"].shape[:-1] == (cfg.n_layers, 3,
+                                                         16, hk)
+    assert c0["k_scale"].dtype == jnp.float32
+
+    dirty = jax.tree_util.tree_map(
+        lambda leaf: jnp.ones_like(leaf), caches)
+    clean = reset_slot(dirty, jnp.asarray(1))
+    ks = np.asarray(clean["seg0"]["k_scale"])
+    assert (ks[:, 1] == 0).all()              # reset slot's scales zeroed
+    assert (ks[:, 0] == 1).all() and (ks[:, 2] == 1).all()
+    # codes are left as-is (masked by per-slot positions, like fp caches)
+    assert (np.asarray(clean["seg0"]["k"])[:, 1] == 1).all()
+
+
+def test_mla_latent_scale_layout_and_reset():
+    """MLA latents quantize per position (head-free cache): scale leaf
+    (n, B, T), cleared by reset_slot."""
+    cfg = MLA_CFG.replace(kv_cache_dtype="int8")
+    caches = init_cache(cfg, B=2, T=8)
+    for key, c in caches.items():
+        if "latent" in c:
+            assert c["latent"].dtype == jnp.int8
+            assert c["latent_scale"].shape == c["latent"].shape[:-1]
+    dirty = jax.tree_util.tree_map(lambda leaf: jnp.ones_like(leaf), caches)
+    clean = reset_slot(dirty, jnp.asarray(0))
+    for key, c in clean.items():
+        if "latent_scale" in c:
+            ls = np.asarray(c["latent_scale"])
+            assert (ls[:, 0] == 0).all() and (ls[:, 1] == 1).all()
+
+
+def test_quantized_slot_caches_shard_under_mesh():
+    """cache_shardings covers the scale leaves; engine output unchanged
+    under a (1, 1) mesh with int8 caches."""
+    from repro.sharding import cache_shardings
+    cfg = CFG.replace(kv_cache_dtype="int8")
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    params = init_params(KEY, cfg)
+    caches = init_cache(cfg, B=2, T=16)
+    sh = cache_shardings(cfg, caches, mesh)
+    for leaf in jax.tree_util.tree_leaves(
+            sh, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding)):
+        assert isinstance(leaf, jax.sharding.NamedSharding)
+
+    prompt = np.asarray(jax.random.randint(KEY, (4,), 0, cfg.vocab_size))
+    ref_eng = Engine(cfg, params, max_len=16, n_slots=2)
+    r0 = ref_eng.submit(prompt, 3)
+    want = ref_eng.run()[r0]
+    eng = Engine(cfg, params, max_len=16, n_slots=2, mesh=mesh)
+    r1 = eng.submit(prompt, 3)
+    assert eng.run()[r1] == want
+
+
+def test_decode_kv_bytes_per_dtype_model():
+    """The roofline bytes model: int8/fp8 rows are dtype_bytes*dh + 4
+    scale bytes per (position, kv-head), k and v each; float rows have
+    no scale term; ragged stays O(len)."""
+    from repro.roofline.analysis import decode_kv_bytes
+    lengths = [8, 16]
+    hk, dh, n = CFG.n_kv_heads, CFG.resolved_head_dim, CFG.n_layers
+    rows = sum(lengths)
+    got32 = decode_kv_bytes(CFG, lengths, T=32, kv_dtype="float32")
+    assert got32 == n * rows * 2 * hk * dh * 4
+    got8 = decode_kv_bytes(CFG, lengths, T=32, kv_dtype="int8")
+    assert got8 == n * rows * 2 * hk * (dh * 1 + 4)
+    assert decode_kv_bytes(CFG, lengths, T=32, kv_dtype="fp8") == got8
+    # auto resolves through cfg.dtype (float32 here)
+    assert decode_kv_bytes(CFG, lengths, T=32, kv_dtype="auto") == got32
+    # quantization shrinks the dominant term ~4x (scales are the small
+    # correction: dh=16 -> (16+4)/64)
+    assert got8 / got32 == (dh + 4) / (4 * dh)

@@ -1,0 +1,82 @@
+"""Assert the BENCH_serve.json schema (CI serve-suite job).
+
+The BENCH_serve.json counterpart of check_decode_schema.py: bench
+regressions must fail loudly instead of silently renaming or dropping
+keys — downstream consumers (ROADMAP claims, docs/serving.md, the v2
+request-API acceptance gate on host-transfer bytes/step) read these keys
+by name. Two checks:
+
+  1. the committed repo-root BENCH_serve.json parses and carries every
+     required key (stale-artifact guard);
+  2. with --regen, a fresh small-trace run of serve_bench.run (written
+     to a temp dir, never clobbering the committed artifact) satisfies
+     the same schema (code-drift guard).
+
+  PYTHONPATH=src python benchmarks/check_serve_schema.py [--regen]
+"""
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+TOP_KEYS = (
+    "config", "n_requests", "n_slots",
+    "static", "continuous", "continuous_int8",
+    "throughput_speedup", "int8_tokens_per_s_delta",
+    "kv_bytes_per_token_by_dtype", "host_transfer_bytes_per_step",
+)
+RUN_KEYS = ("name", "tokens_per_s", "ms_per_token_p50",
+            "ms_per_token_p99", "makespan_s")
+CONTINUOUS_KEYS = RUN_KEYS + ("prefill_s", "decode_s", "prefill_tokens",
+                              "decode_tokens", "fused_steps")
+KV_DTYPES = ("auto", "bf16", "int8", "fp8")
+HOST_TRANSFER_KEYS = ("v1_logits_rows", "v2_sampled_ids",
+                      "v2_with_logprobs")
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        payload = json.load(f)
+    missing = [k for k in TOP_KEYS if k not in payload]
+    assert not missing, f"{path}: missing top-level keys {missing}"
+    for run, keys in (("static", RUN_KEYS),
+                      ("continuous", CONTINUOUS_KEYS),
+                      ("continuous_int8", CONTINUOUS_KEYS)):
+        missing = [k for k in keys if k not in payload[run]]
+        assert not missing, f"{path}: {run} missing keys {missing}"
+    bpt = payload["kv_bytes_per_token_by_dtype"]
+    assert set(bpt) == set(KV_DTYPES), \
+        f"{path}: kv bytes model covers {sorted(bpt)}, want {KV_DTYPES}"
+    hx = payload["host_transfer_bytes_per_step"]
+    missing = [k for k in HOST_TRANSFER_KEYS if k not in hx]
+    assert not missing, f"{path}: host_transfer missing keys {missing}"
+    # the v2 hot-path contract: decode steps ship (B,) sampled ids, not
+    # a (B, V) logits block — the recorded before/after must reflect it
+    assert hx["v2_sampled_ids"] < hx["v1_logits_rows"], \
+        f"{path}: v2 per-step host bytes not below the v1 logits rows"
+    assert hx["v2_sampled_ids"] == payload["n_slots"] * 4, \
+        f"{path}: v2 bytes/step should be 4 bytes per slot (int32 ids)"
+    print(f"ok: {path}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="also regenerate a small-trace artifact in a "
+                         "temp dir and schema-check it")
+    args = ap.parse_args()
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    check(os.path.join(root, "BENCH_serve.json"))
+    if args.regen:
+        if root not in sys.path:          # `python benchmarks/...` direct
+            sys.path.insert(0, root)
+        from benchmarks.serve_bench import run
+        with tempfile.TemporaryDirectory() as td:
+            run(outdir=td, n_requests=4)
+            check(os.path.join(td, "BENCH_serve.json"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,12 +9,19 @@ serving cost, not layer math):
   member arrives and the previous group drains; prompts are LEFT-padded
   to the group max and every member pays the group's max output budget —
   the padded tokens are compute waste, their outputs are discarded.
-* continuous: submit()/step()/collect() — requests enter the fused step
-  the step after they arrive, retire at their own budget, slots recycle.
+* continuous: submit(sampling=SamplingParams(...)) / step() / collect()
+  — requests enter the fused step the step after they arrive, retire at
+  their own budget, slots recycle.
 
 Both paths run the same jitted decode step on the same weights. Reported
 per-token latency is (completion - arrival) / tokens_requested per
 request (p50/p99 over requests); tokens/sec counts requested tokens only.
+
+The artifact also records the v2 API's hot-path win: per fused step the
+pre-v2 engine pulled a (B, V) f32 logits block to host and sampled in
+numpy; the v2 fused on-device sampler transfers only the (B,) sampled
+int32 ids (+ (B,) f32 chosen-token logprobs when requested) —
+`host_transfer_bytes_per_step` in BENCH_serve.json.
 
   PYTHONPATH=src python -m benchmarks.serve_bench
 """
@@ -29,6 +36,7 @@ import numpy as np
 
 from repro.config import AltUpConfig, ModelConfig
 from repro.models.transformer import init_params
+from repro.serve.sampling import SamplingParams
 
 COLS = ["name", "tokens_per_s", "ms_per_token_p50", "ms_per_token_p99",
         "makespan_s"]
@@ -105,7 +113,8 @@ def run_continuous(params, trace, cfg=None, name="continuous") -> Dict:
     # trace's max depth, so every kv-len bucket specialization the timed
     # run will hit is already compiled
     depth = max(len(r["prompt"]) + r["n_new"] for r in trace)
-    wid = eng.submit(list(range(2)), depth - 2)
+    wid = eng.submit(list(range(2)),
+                     sampling=SamplingParams(max_new=depth - 2))
     eng.run()
     eng.collect(wid)
     eng.reset_stats()                   # keep compile out of the split
@@ -116,16 +125,18 @@ def run_continuous(params, trace, cfg=None, name="continuous") -> Dict:
         now = time.perf_counter() - t0
         while pending and pending[0]["arrival"] <= now:
             r = pending.pop(0)
-            rid_to_req[eng.submit(r["prompt"], r["n_new"])] = r
+            rid = eng.submit(r["prompt"],
+                             sampling=SamplingParams(max_new=r["n_new"]))
+            rid_to_req[rid] = r
         if not eng.has_work:
             if pending:                     # idle until the next arrival
                 time.sleep(max(pending[0]["arrival"] - now, 0.0))
             continue
         eng.step()
         now = time.perf_counter() - t0
-        for rid, toks in eng.collect().items():
+        for rid, comp in eng.collect().items():
             done_at[rid] = now
-            rid_to_req[rid]["got"] = toks
+            rid_to_req[rid]["got"] = list(comp.tokens)
     lat_ms, total_tokens = [], 0
     last_done = 0.0
     for rid, r in rid_to_req.items():
@@ -146,10 +157,10 @@ def run_continuous(params, trace, cfg=None, name="continuous") -> Dict:
             "fused_steps": st["steps"]}
 
 
-def run() -> List[Dict]:
+def run(outdir: str | None = None, n_requests: int = 12) -> List[Dict]:
     key = jax.random.PRNGKey(0)
     params = init_params(key, CFG)
-    trace = make_trace()
+    trace = make_trace(n=n_requests)
     rows = [run_static(params, trace), run_continuous(params, trace)]
     # quantized KV-cache serving: same weights, same trace, int8 slot
     # caches (codes + scales, quantize-on-write / fused dequant) — the
@@ -172,13 +183,23 @@ def run() -> List[Dict]:
         "throughput_speedup": ct["tokens_per_s"] / st["tokens_per_s"],
         "int8_tokens_per_s_delta": ct8["tokens_per_s"] / ct["tokens_per_s"],
         "kv_bytes_per_token_by_dtype": bpt,
+        # decode-step device->host traffic, API v1 (host numpy sampling
+        # over a full (B, V) f32 logits block) vs v2 (fused on-device
+        # sampling: (B,) int32 ids, + (B,) f32 logprobs when requested)
+        "host_transfer_bytes_per_step": {
+            "v1_logits_rows": N_SLOTS * CFG.vocab_size * 4,
+            "v2_sampled_ids": N_SLOTS * 4,
+            "v2_with_logprobs": N_SLOTS * 8,
+        },
     }
-    path = emit_json(payload, "BENCH_serve.json")
+    path = emit_json(payload, "BENCH_serve.json", outdir)
     pf, dc = ct.get("prefill_s", 0.0), ct.get("decode_s", 0.0)
+    hx = payload["host_transfer_bytes_per_step"]
     print(f"# wrote {path} (continuous/static tokens/s = "
           f"{payload['throughput_speedup']:.2f}x; int8 cache delta = "
           f"{payload['int8_tokens_per_s_delta']:.2f}x; continuous time "
-          f"split prefill={pf:.3f}s decode={dc:.3f}s)")
+          f"split prefill={pf:.3f}s decode={dc:.3f}s; host bytes/step "
+          f"{hx['v1_logits_rows']} -> {hx['v2_sampled_ids']})")
     return rows
 
 

@@ -1,8 +1,9 @@
 """Serving example: continuous batching of an AltUp model with slot-based
-KV caches — demonstrates the paper's serving story (the widened stream
-adds ZERO KV-cache bytes because caches are built from the active d-wide
-block only) plus the scheduler that keeps those caches busy under mixed
-traffic: staggered submits, per-request budgets, EOS, slot recycling.
+KV caches under the v2 request API — SamplingParams per request, typed
+Completion results (finish_reason / logprobs / timing), and token-level
+streaming — plus the paper's serving story: the widened stream adds ZERO
+KV-cache bytes because caches are built from the active d-wide block
+only.
 
   PYTHONPATH=src python examples/serve_altup.py
 """
@@ -15,6 +16,7 @@ from repro.config import AltUpConfig, ModelConfig
 from repro.models.decode import init_cache
 from repro.models.transformer import init_params
 from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingParams
 
 
 def main():
@@ -32,13 +34,16 @@ def main():
         eng = Engine(cfg, params, max_len=64)
         prompts = jax.random.randint(key, (4, 8), 0, cfg.vocab_size)
         t0 = time.perf_counter()
-        out = eng.generate(prompts, n_new=16, temperature=0.8, key=key)
+        out = eng.generate(prompts, sampling=SamplingParams(
+            max_new=16, temperature=0.8, top_k=64, seed=0))
         dt = (time.perf_counter() - t0) / 16 * 1e3
         print(f"{cfg.name:12s} K={cfg.altup.K} cache={cache_bytes/1e6:.2f}MB "
               f"decode={dt:.1f}ms/tok out[0]={out[0, :8].tolist()}")
     print("note: 4x wider residual stream, identical KV-cache bytes.\n")
 
     # -- continuous batching: 6 staggered requests through 2 slots --------
+    # per-request SamplingParams: mixed greedy/sampled, budgets, seeds,
+    # and one logprobs request — all sampled ON DEVICE in the fused step
     params = init_params(key, wide)
     eng = Engine(wide, params, max_len=64, n_slots=2)
     rids = {}
@@ -46,18 +51,36 @@ def main():
         plen = 4 + 3 * i
         prompt = jax.random.randint(jax.random.fold_in(key, i),
                                     (plen,), 0, wide.vocab_size)
-        rid = eng.submit(prompt, max_new=4 + 2 * i,
-                         temperature=0.0 if i % 2 == 0 else 0.8, seed=i)
-        rids[rid] = plen
+        sp = SamplingParams(max_new=4 + 2 * i,
+                            temperature=0.0 if i % 2 == 0 else 0.8,
+                            top_k=64, seed=i, logprobs=(i == 0))
+        rids[eng.submit(prompt, sampling=sp)] = plen
         eng.step()                       # requests arrive mid-flight
     t0 = time.perf_counter()
     out = eng.run()
     dt = time.perf_counter() - t0
-    total = sum(len(v) for v in out.values())
+    total = sum(len(c.tokens) for c in out.values())
     print(f"continuous: 6 requests / 2 slots, {total} tokens "
           f"in {dt*1e3:.0f}ms")
     for rid in sorted(out):
-        print(f"  rid={rid} prompt_len={rids[rid]:2d} -> {out[rid]}")
+        c = out[rid]
+        lp = (f" lp[0]={c.logprobs[0]:.2f}" if c.logprobs else "")
+        print(f"  rid={rid} prompt_len={rids[rid]:2d} "
+              f"finish={c.finish_reason:6s} ttft={c.ttft_s*1e3:5.1f}ms"
+              f"{lp} -> {list(c.tokens)}")
+
+    # -- streaming: deltas arrive per fused step, interleaved -------------
+    eng = Engine(wide, params, max_len=64, n_slots=2)
+    for i in range(3):
+        prompt = jax.random.randint(jax.random.fold_in(key, 10 + i),
+                                    (5,), 0, wide.vocab_size)
+        eng.submit(prompt, sampling=SamplingParams(
+            max_new=4, temperature=0.9, seed=100 + i))
+    print("\nstream deltas (rid, token):")
+    line = []
+    for rid, tok in eng.stream():
+        line.append(f"({rid},{tok})")
+    print("  " + " ".join(line))
 
 
 if __name__ == "__main__":

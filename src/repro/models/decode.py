@@ -567,6 +567,37 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
     return logits, new_caches
 
 
+def decode_sample_step(params, caches, seen, tokens, pos, n_valid, sparams,
+                       *, cfg: ModelConfig, kv_len=None, want_logprobs=False,
+                       any_sampled=True, mesh=None):
+    """Fused decode + ON-DEVICE sampling — the serving hot path's step.
+
+    Runs decode_step, gathers each slot's sampled logits row (row
+    n_valid-1, vocab-truncated) on device, folds this step's fed tokens
+    into the repetition-penalty `seen` table, and samples per slot under
+    the per-request keys in `sparams` (serve/sampling.sample_rows). Only
+    the (B,) sampled ids — plus the (B,) chosen-token logprobs when
+    want_logprobs — ever leave the device; the (B, V) rows never
+    transfer to host (the v2 API's hot-path contract; the pre-v2 engine
+    shipped a full (B, V) f32 row per step and sampled in numpy).
+
+    seen: (B, V) bool per-slot consumed-token table (engine clears a
+    slot's row at admission). sparams: per-slot parameter arrays from
+    serve/sampling.blank_slot_params. Returns (ids, logprobs|None,
+    new caches, new seen)."""
+    from repro.serve.sampling import sample_rows, update_seen
+    logits, caches = decode_step(params, cfg, caches, tokens, pos,
+                                 n_valid=n_valid, kv_len=kv_len, mesh=mesh)
+    B = tokens.shape[0]
+    rows = logits[jnp.arange(B), jnp.maximum(n_valid - 1, 0),
+                  :cfg.vocab_size]
+    seen = update_seen(seen, tokens, n_valid)
+    ids, lps = sample_rows(rows, sparams, seen,
+                           want_logprobs=want_logprobs,
+                           any_sampled=any_sampled)
+    return ids, lps, caches, seen
+
+
 # Recurrent cache leaves carry history that attention masking cannot
 # neutralize — they must be zeroed when a slot is recycled. Attention
 # k/v/latent leaves self-clean: a recycled slot rewrites positions

@@ -1,24 +1,39 @@
 """Serving engine: continuous batching over slot-based KV caches.
 
-Two APIs share one jitted fused step (models/decode.decode_step — the
-widened (B, S, K, d) AltUp stream + fused predict-correct stay on the hot
-path):
+Request API v2 — three typed objects define the contract
+(serve/sampling.py): `SamplingParams` (per-request temperature / top-k /
+top-p / min-p / repetition penalty / stops / seed / logprobs, validated
+at construction), `Completion` (token ids + finish_reason + optional
+logprobs + timing, popped from collect()/run()), and a `stream()`
+iterator yielding (rid, token) deltas as fused steps complete.
 
-* submit()/step()/collect() — continuous batching. Requests are admitted
-  into cache slots by serve/scheduler.SlotScheduler; every fused step
-  advances EVERY active slot at its own depth (per-slot (B,) position
-  vector). A slot in the prefill phase consumes its next CHUNK of prompt
-  tokens (chunked prefill: up to `prefill_chunk` tokens per step through
-  the same jitted step, so a long prompt costs ceil(len/chunk) steps and
-  never head-of-line-blocks decoding slots — they ride along in the same
-  batch, one token each, padded rows masked out); a slot in the decode
-  phase consumes its last sampled token. Finished requests (EOS or max
-  tokens) retire immediately and their slot is recycled.
+Two decode surfaces share one sampling implementation:
 
-* generate() — legacy static batch (uniform prefill + scalar-pos decode
-  loop). Kept as the baseline the continuous path is benchmarked against
+* submit()/step()/collect()/stream() — continuous batching. Requests are
+  admitted into cache slots by serve/scheduler.SlotScheduler; every
+  fused step advances EVERY active slot at its own depth (per-slot (B,)
+  position vector). A slot in the prefill phase consumes its next CHUNK
+  of prompt tokens (chunked prefill: up to `prefill_chunk` tokens per
+  step through the same jitted step); a slot in the decode phase
+  consumes its last sampled token. Finished requests (eos / stop /
+  length) retire immediately and their slot is recycled.
+
+* generate() — static batch (uniform prefill + scalar-pos decode loop).
+  Kept as the baseline the continuous path is benchmarked against
   (benchmarks/serve_bench.py) and as the oracle it must match token-for-
-  token (tests/test_serve.py).
+  token (tests/test_serve.py) — including under seeded sampling, since
+  both paths run serve/sampling.sample_rows.
+
+Sampling happens ON DEVICE, fused into the jitted step
+(models/decode.decode_sample_step): the active slots' SamplingParams ride
+in as per-slot (B,) arrays, filtering + categorical sampling run under
+per-request counter-based keys (jax.random.fold_in(key(seed),
+sample_index)), and only the (B,) sampled ids — plus (B,) chosen-token
+logprobs when requested — transfer to host. No (B, V) logits row crosses
+the device boundary during decode (benchmarks/serve_bench.py records the
+before/after bytes). Greedy decode is bit-identical to the pre-v2 host
+argmax, and a seeded sampled request is run-to-run reproducible and
+token-identical to a seeded B=1 static generate() with the same params.
 
 Decode-hot-path economics (see docs/kernels.md): the engine passes each
 step's per-slot depths down to the attention layers, which (a) slice the
@@ -27,50 +42,30 @@ slot (a STATIC slice — a handful of jit specializations instead of O(T)
 reads at every depth), and (b) on TPU route S=1 attention through the
 ragged Pallas decode kernel, which additionally skips kv blocks past each
 individual slot's depth. With cfg.kv_cache_dtype = int8/fp8 the slot
-caches hold 1-byte codes + per-head, per-position scales: prefill chunks
-quantize as they land (the same decode_step cache writes), the ragged
-kernel dequantizes in-VMEM, and each byte of those O(len) reads shrinks
-2-4x — the lever that fits 2-4x more concurrent slots in the same HBM
-budget (see docs/serving.md). Chunked prefill is automatically disabled
-(chunk=1) for recurrent (rwkv/mamba) and ring-cache (sliding-window)
-models: recurrent state must advance token-by-token, and a ring write of
-a whole chunk would overwrite keys earlier chunk tokens still need.
-
-Greedy continuous decode is token-identical to per-request generate():
-per-slot computations are row-independent (MoE decode routing is pinned
-drop-free — see models/moe.moe_block). Temperature sampling uses a
-per-request numpy Generator (seeded at submit), which intentionally does
-NOT reproduce generate()'s shared-key jax.random stream.
+caches hold 1-byte codes + per-head, per-position scales (docs/
+serving.md). Chunked prefill is automatically disabled (chunk=1) for
+recurrent (rwkv/mamba) and ring-cache (sliding-window) models.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models.decode import (decode_step, init_cache, kv_quant_spec,
-                                 prefill, reset_slot)
+from repro.models.decode import (decode_sample_step, decode_step,
+                                 init_cache, kv_quant_spec, prefill,
+                                 reset_slot)
+from repro.serve.sampling import (Completion, SamplingParams,
+                                  base_key_data, blank_slot_params,
+                                  fill_slot_params, key_data_of,
+                                  key_width, sample_rows, update_seen)
 from repro.serve.scheduler import SlotScheduler
-
-
-def _serve_step(params, caches, tokens, pos, n_valid, *, cfg, mesh,
-                kv_len=None):
-    """Positional-arg wrapper so jit can donate the cache buffers.
-
-    Returns only each slot's SAMPLED logits row (row n_valid-1, vocab
-    truncated) — gathered on device so the host transfer stays (B, V)
-    instead of (B, C, V) during chunked prefill."""
-    logits, caches = decode_step(params, cfg, caches, tokens, pos,
-                                 n_valid=n_valid, kv_len=kv_len, mesh=mesh)
-    B = tokens.shape[0]
-    rows = logits[jnp.arange(B), jnp.maximum(n_valid - 1, 0),
-                  :cfg.vocab_size]
-    return rows, caches
 
 
 def kv_bucket(needed: int, lo: int, cap: int) -> int:
@@ -78,6 +73,9 @@ def kv_bucket(needed: int, lo: int, cap: int) -> int:
     (floored at `lo`, capped at `cap`). Shared by the engine and the
     decode microbench (benchmarks/kernel_bench.py) so the benchmark
     measures exactly the bucket policy the serving path dispatches."""
+    if lo < 1:
+        raise ValueError(f"kv_bucket floor must be >= 1, got lo={lo} "
+                         f"(lo <= 0 never reaches `needed` by doubling)")
     b = lo
     while b < needed:
         b *= 2
@@ -88,6 +86,9 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, max_len: int, *,
                  n_slots: int = 8, mesh=None, prefill_chunk: int = 8,
                  kv_buckets: bool = True, kv_bucket_min: int = 32):
+        if kv_bucket_min < 1:
+            raise ValueError(
+                f"kv_bucket_min must be >= 1, got {kv_bucket_min}")
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.max_len = max_len
         self.n_slots = n_slots
@@ -97,13 +98,26 @@ class Engine:
         self._step = jax.jit(partial(decode_step, cfg=cfg, mesh=mesh),
                              static_argnames=("kv_len",))
         # continuous-batching state (allocated lazily on first submit)
-        self._fused = jax.jit(partial(_serve_step, cfg=cfg, mesh=mesh),
-                              static_argnames=("kv_len",),
-                              donate_argnums=(1,))
+        self._fused = jax.jit(
+            partial(decode_sample_step, cfg=cfg, mesh=mesh),
+            static_argnames=("kv_len", "want_logprobs", "any_sampled"),
+            donate_argnums=(1, 2))
         self._reset = jax.jit(reset_slot, donate_argnums=(0,))
+        self._clear_seen = jax.jit(
+            lambda s, slot: s.at[slot].set(False), donate_argnums=(0,))
+        # generate()'s per-token sampling: the SAME sample_rows as the
+        # fused serving step, jitted standalone for the static loop
+        self._sample = jax.jit(
+            sample_rows, static_argnames=("want_logprobs", "any_sampled"))
+        self._seen_update = jax.jit(update_seen)
         self._sched: Optional[SlotScheduler] = None
         self._caches = None
-        self._rngs: Dict[int, np.random.Generator] = {}
+        self._seen = None
+        self._base_keys: Dict[int, np.ndarray] = {}   # rid -> key data
+        self._events: List[Tuple[int, int]] = []      # last step's deltas
+        # (B, n) chosen-token logprobs of the most recent generate() run
+        # with sampling.logprobs=True; None otherwise
+        self.last_logprobs = None
         # prefill/decode split for benchmarks (benchmarks/serve_bench.py):
         # step time is attributed proportionally to the tokens each phase
         # consumed in that fused step
@@ -124,7 +138,7 @@ class Engine:
         return kv_bucket(needed, self._kv_bucket_min, self.max_len)
 
     # ------------------------------------------------------------------
-    # continuous batching: submit / step / collect
+    # continuous batching: submit / step / collect / stream
     # ------------------------------------------------------------------
 
     def _ensure_slots(self):
@@ -154,27 +168,72 @@ class Engine:
         self._chunk = (1 if self._has_recurrent or has_ring
                        else self._prefill_chunk)
         caches = init_cache(self.cfg, self.n_slots, self.max_len)
+        seen = jnp.zeros((self.n_slots, self.cfg.vocab_size), bool)
+        self._sp_shardings = None
         if self.mesh is not None:
-            from repro.sharding import cache_shardings
+            from repro.sharding import (cache_shardings,
+                                        sampling_param_shardings)
             caches = jax.device_put(
                 caches, cache_shardings(self.cfg, caches, self.mesh))
+            sh = sampling_param_shardings(
+                {"seen": seen, **blank_slot_params(self.n_slots)},
+                self.mesh)
+            seen = jax.device_put(seen, sh.pop("seen"))
+            self._sp_shardings = sh
         self._caches = caches
+        self._seen = seen
 
-    def submit(self, prompt, max_new: int, *, temperature: float = 0.0,
+    def submit(self, prompt, max_new: Optional[int] = None, *,
+               sampling: Optional[SamplingParams] = None,
+               temperature: Optional[float] = None,
                eos_id: Optional[int] = None,
                seed: Optional[int] = None) -> int:
         """Enqueue one request. prompt: 1-D sequence of token ids.
-        Returns a request id for collect(). seed=None gives each sampled
-        request an independent RNG stream (seeded by its rid)."""
+
+        v2 API: submit(prompt, sampling=SamplingParams(...)). Returns a
+        request id for collect()/stream(). sampling.seed=None gives each
+        sampled request an independent stream (seeded by its rid).
+
+        DEPRECATED (one release, since the v2 API): the legacy
+        submit(prompt, max_new, temperature=..., eos_id=..., seed=...)
+        form still works and constructs the equivalent SamplingParams —
+        token-for-token identical to the v2 call — but emits a
+        DeprecationWarning."""
         self._ensure_slots()
         prompt = np.asarray(prompt).reshape(-1).tolist()
-        return self._sched.submit(prompt, max_new, temperature=temperature,
-                                  eos_id=eos_id, seed=seed)
+        if sampling is None:
+            if max_new is None:
+                raise TypeError(
+                    "submit() requires sampling=SamplingParams(...) "
+                    "(or the deprecated max_new form)")
+            warnings.warn(
+                "submit(prompt, max_new, temperature=..., eos_id=..., "
+                "seed=...) is deprecated; pass sampling=SamplingParams("
+                "max_new=..., temperature=..., eos_id=..., seed=...). "
+                "The legacy kwargs will be removed next release.",
+                DeprecationWarning, stacklevel=2)
+            # pre-v2 treated temperature <= 0 as greedy; clamp so legacy
+            # negative-temperature calls keep working for the shim's life
+            sampling = SamplingParams(
+                max_new=int(max_new),
+                temperature=max(0.0, float(temperature or 0.0)),
+                eos_id=eos_id, seed=seed)
+        elif any(a is not None for a in (max_new, temperature, eos_id,
+                                         seed)):
+            raise TypeError(
+                "pass either sampling=SamplingParams(...) or the "
+                "deprecated (max_new, temperature, eos_id, seed) "
+                "kwargs — not both")
+        rid = self._sched.submit(prompt, sampling)
+        s = sampling.seed if sampling.seed is not None else rid
+        self._base_keys[rid] = base_key_data(s)
+        return rid
 
     def step(self) -> int:
         """One fused step: admit queued requests into free slots, advance
         every active slot (a chunk of prompt tokens while prefilling, one
-        token while decoding), retire finished requests.
+        token while decoding), retire finished requests. The (rid, token)
+        deltas sampled this step are exposed via stream().
         Returns the number of slots that were active this step."""
         if self._sched is None:
             return 0
@@ -185,7 +244,12 @@ class Engine:
             # are cleared so stale rows dequantize to exact zeros.
             if self._admit_reset:
                 self._caches = self._reset(self._caches, st.slot)
+            # the repetition-penalty seen table always resets: it carries
+            # the previous occupant's consumed-token set
+            self._seen = self._clear_seen(self._seen,
+                                          np.int32(st.slot))
         active = dict(self._sched.active)
+        self._events = []
         if not active:
             return 0
         B = self.n_slots
@@ -196,7 +260,9 @@ class Engine:
         tokens = np.zeros((B, C), np.int32)
         pos = np.zeros((B,), np.int32)
         nval = np.zeros((B,), np.int32)
+        sparams = blank_slot_params(B)
         samples: Dict[int, bool] = {}
+        want_lp = any_sampled = False
         pf_tokens = dec_tokens = 0
         needed = 1
         for slot, st in active.items():
@@ -206,17 +272,29 @@ class Engine:
             pos[slot] = st.pos
             nval[slot] = n
             samples[slot] = st.samples_after(n)
+            sp = st.request.sampling
+            fill_slot_params(sparams, slot, sp,
+                             self._base_keys[st.request.rid],
+                             len(st.generated))
+            want_lp |= sp.logprobs
+            any_sampled |= not sp.greedy
             if st.in_prefill:
                 pf_tokens += n
             else:
                 dec_tokens += n
             needed = max(needed, st.pos + n)
         kv_len = self._bucket(needed)
+        sp_dev = {k: jnp.asarray(v) for k, v in sparams.items()}
+        if self._sp_shardings is not None:
+            sp_dev = jax.device_put(sp_dev, self._sp_shardings)
         t0 = time.perf_counter()
-        rows, self._caches = self._fused(
-            self.params, self._caches, jnp.asarray(tokens),
-            jnp.asarray(pos), jnp.asarray(nval), kv_len=kv_len)
-        lg = np.asarray(rows, np.float32)                 # (B, V)
+        ids, lps, self._caches, self._seen = self._fused(
+            self.params, self._caches, self._seen, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(nval), sp_dev,
+            kv_len=kv_len, want_logprobs=want_lp,
+            any_sampled=any_sampled)
+        ids = np.asarray(ids)                 # (B,) — the only per-step
+        lps = np.asarray(lps) if want_lp else None  # device->host pulls
         dt = time.perf_counter() - t0
         total = max(pf_tokens + dec_tokens, 1)
         self.stats["steps"] += 1
@@ -224,30 +302,56 @@ class Engine:
         self.stats["decode_tokens"] += dec_tokens
         self.stats["prefill_s"] += dt * pf_tokens / total
         self.stats["decode_s"] += dt * dec_tokens / total
+        now = time.monotonic()
         for slot, st in active.items():
             st.advance(int(nval[slot]))
             if not samples[slot]:
                 continue
-            tok = self._sample_host(lg[slot], st.request)
-            st.note_token(tok)
+            tok = int(ids[slot])
+            lp = (float(lps[slot])
+                  if lps is not None and st.request.sampling.logprobs
+                  else None)
+            st.note_token(tok, lp, now=now)
+            self._events.append((st.request.rid, tok))
             if st.should_retire():
-                self._sched.retire(slot)
-                self._rngs.pop(st.request.rid, None)
+                self._sched.retire(st.slot)
+                self._base_keys.pop(st.request.rid, None)
         return len(active)
 
+    def stream(self) -> Iterator[Tuple[int, int]]:
+        """Drive step() while work remains, yielding (rid, token) deltas
+        as each fused step completes — tokens arrive per request the
+        step they are sampled, interleaved across the active slots.
+        Finished requests remain collectable via collect()."""
+        self._ensure_slots()
+        while self._sched.has_work:
+            self.step()
+            yield from self._events
+
+    def _completion(self, st) -> Completion:
+        r = st.request
+        return Completion(
+            rid=r.rid, tokens=tuple(st.generated),
+            finish_reason=st.finish_reason or "length",
+            prompt_len=len(r.prompt),
+            logprobs=(tuple(st.logprobs) if r.sampling.logprobs
+                      else None),
+            submitted_at=r.arrival, first_token_at=st.t_first,
+            finished_at=st.t_done)
+
     def collect(self, rid: Optional[int] = None):
-        """Pop finished outputs. With rid: that request's generated token
-        list (None if not finished). Without: {rid: [tokens...]} for every
-        finished request."""
+        """Pop finished results as typed Completions. With rid: that
+        request's Completion (None if not finished). Without:
+        {rid: Completion} for every finished request."""
         if self._sched is None:
             return None if rid is not None else {}
         if rid is not None:
             st = self._sched.pop_finished(rid)
-            return None if st is None else list(st.generated)
-        return {r: list(st.generated)
+            return None if st is None else self._completion(st)
+        return {r: self._completion(st)
                 for r, st in self._sched.pop_finished().items()}
 
-    def run(self, max_steps: int = 100_000) -> Dict[int, list]:
+    def run(self, max_steps: int = 100_000) -> Dict[int, Completion]:
         """Drive step() until queue + slots drain; returns collect().
         Raises if max_steps is exhausted with work still pending, so
         callers never see a silently-partial result set."""
@@ -267,52 +371,98 @@ class Engine:
     def has_work(self) -> bool:
         return self._sched is not None and self._sched.has_work
 
-    def _sample_host(self, logits_row: np.ndarray, req) -> int:
-        """Per-request host-side sampling on a (V,) logits row."""
-        if req.temperature <= 0.0:
-            return int(np.argmax(logits_row))
-        rng = self._rngs.setdefault(req.rid,
-                                    np.random.default_rng(req.seed))
-        z = logits_row / req.temperature
-        z = z - z.max()
-        p = np.exp(z)
-        p /= p.sum()
-        return int(rng.choice(len(p), p=p))
-
     # ------------------------------------------------------------------
-    # static batch (legacy baseline / oracle)
+    # static batch (baseline / oracle) — same sampler as the fused step
     # ------------------------------------------------------------------
 
-    def generate(self, prompt_tokens: jax.Array, n_new: int, *,
+    def generate(self, prompt_tokens: jax.Array, n_new: Optional[int] = None,
+                 *, sampling: Optional[SamplingParams] = None,
                  temperature: float = 0.0, key=None,
                  encoder_frames=None) -> jax.Array:
-        """prompt_tokens: (B, S). Returns (B, n_new) generated ids."""
+        """prompt_tokens: (B, S). Returns (B, n) generated ids.
+
+        v2: generate(prompts, sampling=SamplingParams(...)) — row b
+        samples under base key jax.random.key(sampling.seed + b) (seed
+        defaults to 0), folded by token index, through the SAME
+        serve/sampling.sample_rows as the continuous path. The static
+        batch always emits the full n tokens per row (fixed output
+        shape) — eos_id/stop_token_ids/stop_sequences are scheduler-
+        level retirement concerns — so a B=1 seeded call yields the
+        undiminished stream of which a continuous request with the same
+        SamplingParams returns the PREFIX up to its finish reason
+        (token-identical when nothing stops early). The legacy (n_new,
+        temperature, key) form is kept for the oracle/baseline callers:
+        key=None means greedy; with a key, row b uses fold_in(key, b) as
+        its base key. n defaults to sampling.max_new; an explicit n_new
+        is capped at sampling.max_new."""
         cfg = self.cfg
         B, S = prompt_tokens.shape
-        assert S + n_new <= self.max_len
+        if sampling is None:
+            if n_new is None:
+                raise TypeError("generate() needs n_new or sampling=")
+            sampled = temperature > 0.0 and key is not None
+            sampling = SamplingParams(
+                max_new=int(n_new),
+                temperature=float(temperature) if sampled else 0.0)
+            if sampled:
+                base = jax.random.wrap_key_data(
+                    jnp.asarray(key_data_of(key)))
+                keys = np.stack([
+                    np.asarray(jax.random.key_data(
+                        jax.random.fold_in(base, b)), np.uint32)
+                    for b in range(B)])
+            else:
+                keys = np.zeros((B, key_width()), np.uint32)
+        elif key is not None or temperature != 0.0:
+            raise TypeError(
+                "pass either sampling=SamplingParams(...) or the legacy "
+                "(temperature, key) kwargs — not both")
+        else:
+            seed = sampling.seed if sampling.seed is not None else 0
+            keys = np.stack([base_key_data(seed + b) for b in range(B)])
+            if n_new is not None:
+                n_new = min(int(n_new), sampling.max_new)
+        n = int(n_new) if n_new is not None else sampling.max_new
+        assert S + n <= self.max_len
+        any_sampled = not sampling.greedy
+        sparams = blank_slot_params(B)
+        for b in range(B):
+            fill_slot_params(sparams, b, sampling, keys[b], 0)
+        sp_dev = {k: jnp.asarray(v) for k, v in sparams.items()}
+        want_lp = sampling.logprobs
+        seen = jnp.zeros((B, cfg.vocab_size), bool)
+
         logits, caches = prefill(
             self.params, cfg, prompt_tokens, T=self.max_len, mesh=self.mesh,
             encoder_frames=encoder_frames,
             step_fn=lambda p, c, tk, t: self._step(
                 p, caches=c, tokens=tk, pos=jnp.asarray(t),
                 kv_len=self._bucket(t + 1)))
-        outs = []
-        tok = self._sample(logits[:, -1:], temperature, key, 0)
+        seen = self._seen_update(seen, jnp.asarray(prompt_tokens))
+        outs, lp_outs = [], []
+
+        def sample_at(logits, t):
+            rows = logits[:, -1, :cfg.vocab_size]
+            sp_dev["sample_idx"] = jnp.full((B,), t, jnp.int32)
+            return self._sample(rows, sp_dev, seen,
+                                want_logprobs=want_lp,
+                                any_sampled=any_sampled)
+
+        tok, lp = sample_at(logits, 0)
+        tok = tok[:, None]
         outs.append(tok)
-        for t in range(1, n_new):
+        lp_outs.append(lp)
+        for t in range(1, n):
             logits, caches = self._step(self.params, caches=caches,
                                         tokens=tok,
                                         pos=jnp.asarray(S + t - 1),
                                         kv_len=self._bucket(S + t))
-            tok = self._sample(logits[:, -1:], temperature, key, t)
+            seen = self._seen_update(seen, tok)
+            tok, lp = sample_at(logits, t)
+            tok = tok[:, None]
             outs.append(tok)
-        return jnp.concatenate(outs, axis=1)
-
-    def _sample(self, logits, temperature, key, t):
-        V = self.cfg.vocab_size
-        logits = logits[..., :V]
-        if temperature <= 0.0 or key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(key, t)
-        return jax.random.categorical(
-            k, logits / temperature, axis=-1).astype(jnp.int32)
+            lp_outs.append(lp)
+        out = jnp.concatenate(outs, axis=1)
+        self.last_logprobs = (jnp.stack(lp_outs, axis=1)   # (B, n)
+                              if want_lp else None)
+        return out

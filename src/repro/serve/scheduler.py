@@ -3,9 +3,9 @@
 Pure host-side bookkeeping — no jax. The scheduler owns the mapping from
 requests to cache slots:
 
-  submit() -> admission queue (FIFO)
+  submit(prompt, SamplingParams) -> admission queue (FIFO)
   admit()  -> pops queued requests into free slots (in-flight batching)
-  note_token() / should_retire() -> per-request EOS / max-token tracking
+  note_token() / should_retire() -> per-request finish tracking
   retire() -> frees the slot for recycling
 
 The engine (serve/engine.py) drives it: one admit() before every fused
@@ -16,24 +16,29 @@ rows; only recurrent state (rwkv/mamba) needs an explicit reset, which
 the engine performs at admission (models/decode.reset_slot).
 
 Request lifecycle:  QUEUED -> PREFILL -> DECODE -> FINISHED
-(PREFILL and DECODE both advance one token per fused step; the phase
-boundary is where sampling starts.)
+(PREFILL consumes prompt tokens — possibly several per fused step under
+chunked prefill — DECODE consumes the last sampled token; the phase
+boundary is where sampling starts.) A request finishes with a typed
+reason — "eos" | "stop" | "length" (serve/sampling.finish_reason_for
+defines the precedence) — and stop-sequence suffix matching over the
+generated tokens happens HERE, in RequestState.should_retire().
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence
+
+from repro.serve.sampling import SamplingParams, finish_reason_for
 
 
 @dataclass
 class Request:
     rid: int
     prompt: List[int]
-    max_new: int
-    temperature: float = 0.0
-    eos_id: Optional[int] = None
-    seed: int = 0
+    sampling: SamplingParams
+    arrival: float = 0.0            # time.monotonic() at submit
 
 
 @dataclass
@@ -48,6 +53,10 @@ class RequestState:
     pos: int = 0
     cursor: int = 0
     generated: List[int] = field(default_factory=list)
+    logprobs: List[float] = field(default_factory=list)
+    finish_reason: Optional[str] = None
+    t_first: float = 0.0            # first sampled token (monotonic)
+    t_done: float = 0.0             # retirement (monotonic)
 
     @property
     def in_prefill(self) -> bool:
@@ -82,15 +91,21 @@ class RequestState:
             self.cursor += n
         self.pos += n
 
-    def note_token(self, token: int) -> None:
+    def note_token(self, token: int, logprob: Optional[float] = None,
+                   now: Optional[float] = None) -> None:
+        if not self.generated:
+            self.t_first = time.monotonic() if now is None else now
         self.generated.append(token)
+        if logprob is not None:
+            self.logprobs.append(logprob)
 
     def should_retire(self) -> bool:
-        r = self.request
-        if len(self.generated) >= r.max_new:
-            return True
-        return (r.eos_id is not None and self.generated
-                and self.generated[-1] == r.eos_id)
+        """Check eos / stop-token / stop-sequence / max_new against the
+        generated tokens; records the finish reason when one fires."""
+        reason = finish_reason_for(self.generated, self.request.sampling)
+        if reason is not None:
+            self.finish_reason = reason
+        return reason is not None
 
 
 class SlotScheduler:
@@ -107,33 +122,28 @@ class SlotScheduler:
         self._next_rid = 0
 
     # -- submission --------------------------------------------------------
-    def submit(self, prompt: Sequence[int], max_new: int, *,
-               temperature: float = 0.0, eos_id: Optional[int] = None,
-               seed: Optional[int] = None) -> int:
-        """seed=None defaults to the request id, so concurrent sampled
-        requests get independent RNG streams; pass an explicit seed for
-        reproducibility."""
+    def submit(self, prompt: Sequence[int],
+               sampling: SamplingParams) -> int:
+        """Enqueue one request under a validated SamplingParams (the
+        per-request sampling contract; max_new/eos/stops live there)."""
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
-        if max_new < 1:
-            raise ValueError("max_new must be >= 1")
-        if len(prompt) + max_new > self.max_len:
+        if len(prompt) + sampling.max_new > self.max_len:
             raise ValueError(
-                f"prompt({len(prompt)}) + max_new({max_new}) exceeds "
-                f"max_len={self.max_len}")
+                f"prompt({len(prompt)}) + max_new({sampling.max_new}) "
+                f"exceeds max_len={self.max_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, prompt, max_new,
-                                   temperature=temperature, eos_id=eos_id,
-                                   seed=rid if seed is None else seed))
+        self._queue.append(Request(rid, prompt, sampling,
+                                   arrival=time.monotonic()))
         return rid
 
     # -- slot allocation ---------------------------------------------------
     def admit(self) -> List[RequestState]:
         """Move queued requests into free slots (FIFO). Returns the newly
         admitted states — the engine must reset their recurrent cache
-        rows before the next fused step."""
+        rows (and their seen-table row) before the next fused step."""
         admitted = []
         while self._free and self._queue:
             slot = self._free.popleft()
@@ -146,6 +156,7 @@ class SlotScheduler:
     def retire(self, slot: int) -> RequestState:
         """Finish the request in `slot` and recycle the slot."""
         st = self.active.pop(slot)
+        st.t_done = time.monotonic()
         self.finished[st.request.rid] = st
         self._free.append(slot)
         return st

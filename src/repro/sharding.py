@@ -118,6 +118,18 @@ def cache_shardings(cfg: ModelConfig, caches: Any, mesh: Mesh) -> Any:
     return make_shardings(cache_pspecs(cfg, caches, mesh), mesh)
 
 
+def sampling_param_shardings(arrs: Any, mesh: Mesh) -> Any:
+    """NamedShardings for the serving engine's per-slot sampling state:
+    the (B,) SamplingParams arrays (temperature/top_k/top_p/min_p/
+    rep_pen/sample_idx), the (B, 2) per-request key data, and the (B, V)
+    repetition-penalty seen table. The slot axis IS the batch axis, so
+    these follow the slot caches' batch rule verbatim: shard dim 0 over
+    ("pod","data") when n_slots divides them, replicate otherwise (the
+    trailing key/vocab dims always replicate — the sampler reads whole
+    rows per slot)."""
+    return make_shardings(batch_specs(arrs, mesh), mesh)
+
+
 def batch_pspec(mesh: Optional[Mesh]) -> P:
     if mesh is None:
         return P()

@@ -26,6 +26,7 @@ from repro.config import (AltUpConfig, MLAConfig, ModelConfig, MoEConfig,
 from repro.models.decode import init_cache, prefill, reset_slot
 from repro.models.transformer import init_params
 from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingParams
 
 KEY = jax.random.PRNGKey(0)
 
@@ -103,15 +104,17 @@ def test_continuous_matches_static_quantized(name, kind):
     want = _static_oracle(cfg, params, prompts, n_news)
 
     eng = Engine(cfg, params, max_len=32, n_slots=2)
-    rids = [eng.submit(prompts[0], n_news[0]),
-            eng.submit(prompts[1], n_news[1])]
+    rids = [eng.submit(prompts[0], sampling=SamplingParams(max_new=n_news[0])),
+            eng.submit(prompts[1], sampling=SamplingParams(max_new=n_news[1]))]
     eng.step()
     eng.step()
-    rids.append(eng.submit(prompts[2], n_news[2]))
+    rids.append(eng.submit(prompts[2],
+                           sampling=SamplingParams(max_new=n_news[2])))
     eng.step()
-    rids.append(eng.submit(prompts[3], n_news[3]))
+    rids.append(eng.submit(prompts[3],
+                           sampling=SamplingParams(max_new=n_news[3])))
     out = eng.run()
-    got = [out[r] for r in rids]
+    got = [list(out[r].tokens) for r in rids]
     assert got == want, (name, kind, got, want)
 
 
@@ -155,8 +158,10 @@ def test_explicit_float_modes_bit_identical_to_auto(mode, act):
     eng_m = Engine(cfg.replace(kv_cache_dtype=mode), params, max_len=32,
                    n_slots=2)
     prompt = np.asarray(toks[0, :6])
-    ra, rm = eng_a.submit(prompt, 4), eng_m.submit(prompt, 4)
-    assert eng_a.run()[ra] == eng_m.run()[rm]
+    sp = SamplingParams(max_new=4)
+    ra, rm = eng_a.submit(prompt, sampling=sp), \
+        eng_m.submit(prompt, sampling=sp)
+    assert eng_a.run()[ra].tokens == eng_m.run()[rm].tokens
 
 
 def test_chunked_prefill_quantizes_as_it_lands():
@@ -173,9 +178,10 @@ def test_chunked_prefill_quantizes_as_it_lands():
     for chunk in (1, 4, 8):
         eng = Engine(cfg, params, max_len=32, n_slots=2,
                      prefill_chunk=chunk)
-        rids = [eng.submit(p, n) for p, n in zip(prompts, n_news)]
+        rids = [eng.submit(p, sampling=SamplingParams(max_new=n))
+                for p, n in zip(prompts, n_news)]
         out = eng.run()
-        assert [out[r] for r in rids] == want, chunk
+        assert [list(out[r].tokens) for r in rids] == want, chunk
 
 
 def test_kv_bucket_slicing_exact_under_int8():
@@ -188,8 +194,8 @@ def test_kv_bucket_slicing_exact_under_int8():
     for kv_buckets in (True, False):
         eng = Engine(cfg, params, max_len=64, n_slots=2,
                      kv_buckets=kv_buckets)
-        rid = eng.submit(prompt, 5)
-        outs.append(eng.run()[rid])
+        rid = eng.submit(prompt, sampling=SamplingParams(max_new=5))
+        outs.append(list(eng.run()[rid].tokens))
     assert outs[0] == outs[1]
 
 
@@ -249,11 +255,11 @@ def test_quantized_slot_caches_shard_under_mesh():
 
     prompt = np.asarray(jax.random.randint(KEY, (4,), 0, cfg.vocab_size))
     ref_eng = Engine(cfg, params, max_len=16, n_slots=2)
-    r0 = ref_eng.submit(prompt, 3)
-    want = ref_eng.run()[r0]
+    r0 = ref_eng.submit(prompt, sampling=SamplingParams(max_new=3))
+    want = ref_eng.run()[r0].tokens
     eng = Engine(cfg, params, max_len=16, n_slots=2, mesh=mesh)
-    r1 = eng.submit(prompt, 3)
-    assert eng.run()[r1] == want
+    r1 = eng.submit(prompt, sampling=SamplingParams(max_new=3))
+    assert eng.run()[r1].tokens == want
 
 
 def test_decode_kv_bytes_per_dtype_model():

@@ -1,0 +1,376 @@
+"""Request API v2 tests: SamplingParams validation, the on-device
+sampler's filters, finish reasons / stop handling, the deprecated
+submit() shim, streaming, logprobs, and the kv_bucket regression.
+
+The heavier continuous==static oracles live in tests/test_serve.py
+(greedy 9-config suite + the seeded-sampling subset); this file covers
+the API contract itself.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import AltUpConfig, ModelConfig
+from repro.models.transformer import forward, init_params
+from repro.serve.engine import Engine, kv_bucket
+from repro.serve.sampling import (SamplingParams, blank_slot_params,
+                                  base_key_data, finish_reason_for,
+                                  sample_rows, update_seen)
+
+CFG = ModelConfig(name="samp", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                  altup=AltUpConfig(K=2))
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# SamplingParams validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(max_new=0),
+    dict(temperature=-0.1),
+    dict(temperature=float("nan")),
+    dict(top_k=-1),
+    dict(top_p=0.0),
+    dict(top_p=1.5),
+    dict(min_p=-0.1),
+    dict(min_p=1.1),
+    dict(repetition_penalty=0.0),
+    dict(stop_sequences=((),)),
+])
+def test_sampling_params_rejects_invalid(bad):
+    with pytest.raises(ValueError):
+        SamplingParams(**bad)
+
+
+def test_sampling_params_normalizes_and_hashes():
+    sp = SamplingParams(stop_token_ids=[np.int64(3), 4],
+                        stop_sequences=[[1, 2], (np.int32(5),)])
+    assert sp.stop_token_ids == (3, 4)
+    assert sp.stop_sequences == ((1, 2), (5,))
+    hash(sp)                                   # frozen + hashable
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+# ---------------------------------------------------------------------------
+# the on-device sampler (unit level, no model)
+# ---------------------------------------------------------------------------
+
+def _sp_arrays(B, **over):
+    arrs = blank_slot_params(B)
+    for k, v in over.items():
+        arrs[k][:] = v
+    for b in range(B):
+        arrs["key"][b] = base_key_data(b)
+    return {k: jnp.asarray(v) for k, v in arrs.items()}
+
+
+def test_top_k_one_is_argmax():
+    rows = jnp.asarray(np.random.default_rng(0).normal(size=(3, 32)),
+                       jnp.float32)
+    seen = jnp.zeros((3, 32), bool)
+    sp = _sp_arrays(3, temperature=1.0, top_k=1)
+    ids, _ = sample_rows(rows, sp, seen)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.asarray(jnp.argmax(rows, axis=-1)))
+
+
+def test_tiny_top_p_and_full_min_p_are_argmax():
+    rows = jnp.asarray(np.random.default_rng(1).normal(size=(2, 64)),
+                       jnp.float32)
+    seen = jnp.zeros((2, 64), bool)
+    for over in (dict(top_p=1e-6), dict(min_p=1.0)):
+        sp = _sp_arrays(2, temperature=1.0, **over)
+        ids, _ = sample_rows(rows, sp, seen)
+        np.testing.assert_array_equal(
+            np.asarray(ids), np.asarray(jnp.argmax(rows, axis=-1)))
+
+
+def test_top_k_never_samples_outside_the_k_largest():
+    rng = np.random.default_rng(2)
+    rows = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    seen = jnp.zeros((4, 64), bool)
+    topk_ids = np.argsort(np.asarray(rows), axis=-1)[:, -8:]
+    for t in range(20):
+        sp = _sp_arrays(4, temperature=1.3, top_k=8, sample_idx=t)
+        ids = np.asarray(sample_rows(rows, sp, seen)[0])
+        for b in range(4):
+            assert ids[b] in topk_ids[b]
+
+
+def test_repetition_penalty_demotes_seen_tokens():
+    # token 0 is the argmax but has been consumed; a strong penalty must
+    # flip greedy decoding to the runner-up, and penalty=1.0 must be a
+    # bitwise no-op on the rows
+    rows = jnp.asarray([[2.0, 1.9] + [0.0] * 30], jnp.float32)
+    seen = jnp.zeros((1, 32), bool).at[0, 0].set(True)
+    ids, _ = sample_rows(rows, _sp_arrays(1, rep_pen=4.0), seen)
+    assert int(ids[0]) == 1
+    ids, _ = sample_rows(rows, _sp_arrays(1), seen)
+    assert int(ids[0]) == 0
+
+
+def test_update_seen_drops_padded_tokens():
+    seen = jnp.zeros((2, 16), bool)
+    tokens = jnp.asarray([[3, 5], [7, 9]], jnp.int32)
+    seen = update_seen(seen, tokens, n_valid=jnp.asarray([2, 1]))
+    got = np.asarray(seen)
+    assert got[0, 3] and got[0, 5] and got[1, 7]
+    assert not got[1, 9]                      # padded -> dropped
+
+
+def test_seeded_sampling_is_deterministic_per_index():
+    rows = jnp.asarray(np.random.default_rng(3).normal(size=(2, 64)),
+                       jnp.float32)
+    seen = jnp.zeros((2, 64), bool)
+    a = np.asarray(sample_rows(rows, _sp_arrays(2, temperature=1.0,
+                                                sample_idx=4), seen)[0])
+    b = np.asarray(sample_rows(rows, _sp_arrays(2, temperature=1.0,
+                                                sample_idx=4), seen)[0])
+    np.testing.assert_array_equal(a, b)       # same (key, index) -> same
+    # the fold index actually drives the draw: 10 consecutive indices
+    # cannot all repeat the same token at temperature 1 over 64 logits
+    draws = [tuple(np.asarray(sample_rows(
+        rows, _sp_arrays(2, temperature=1.0, sample_idx=t), seen)[0]))
+        for t in range(10)]
+    assert len(set(draws)) > 1
+
+
+# ---------------------------------------------------------------------------
+# finish reasons & stop handling
+# ---------------------------------------------------------------------------
+
+def test_finish_reason_precedence_eos_stop_length():
+    sp = SamplingParams(max_new=3, eos_id=9, stop_token_ids=(9, 5),
+                        stop_sequences=((7, 9),))
+    # same final token triggers eos AND stop-token AND stop-sequence AND
+    # length: eos wins
+    assert finish_reason_for([7, 7, 9], sp) == "eos"
+    # stop token beats the simultaneous length limit
+    assert finish_reason_for([7, 7, 5], sp) == "stop"
+    # stop-sequence suffix match (no stop token, no eos)
+    sp2 = SamplingParams(max_new=8, stop_sequences=((7, 3),))
+    assert finish_reason_for([1, 7, 3], sp2) == "stop"
+    assert finish_reason_for([7, 3, 1], sp2) is None     # not a suffix
+    assert finish_reason_for([1] * 8, sp2) == "length"
+    assert finish_reason_for([], sp2) is None
+
+
+def test_stop_sequence_matches_generated_only_not_prompt():
+    """A stop sequence whose head lies in the PROMPT must not fire: the
+    match runs over generated tokens only, so the request keeps
+    decoding. Chunked prefill must not change that (the first sampled
+    token rides on the last prefill chunk)."""
+    params = init_params(KEY, CFG)
+    prompt = np.asarray(jax.random.randint(KEY, (9,), 0, CFG.vocab_size))
+    static = Engine(CFG, params, max_len=32)
+    first = int(np.asarray(static.generate(jnp.asarray(prompt)[None],
+                                           1))[0, 0])
+    # stop sequence = (last prompt token, first greedy token): the pair
+    # does appear contiguously in prompt+generated, but its head is in
+    # the prompt -> no stop
+    seq = (int(prompt[-1]), first)
+    outs = []
+    for chunk in (1, 4, 8):
+        eng = Engine(CFG, params, max_len=32, n_slots=2,
+                     prefill_chunk=chunk)
+        rid = eng.submit(prompt, sampling=SamplingParams(
+            max_new=4, stop_sequences=(seq,)))
+        comp = eng.run()[rid]
+        assert comp.finish_reason == "length", chunk
+        assert len(comp.tokens) == 4
+        outs.append(list(comp.tokens))
+    assert outs[0] == outs[1] == outs[2]      # chunk-invariant
+
+
+def test_stop_sequence_within_generated_fires_across_chunk_sizes():
+    """A 2-token stop sequence made of the request's own first two
+    greedy tokens fires as soon as both are generated, at every prefill
+    chunking, and the matched suffix stays in the completion."""
+    params = init_params(KEY, CFG)
+    prompt = np.asarray(jax.random.randint(jax.random.fold_in(KEY, 3),
+                                           (7,), 0, CFG.vocab_size))
+    static = Engine(CFG, params, max_len=32)
+    g = np.asarray(static.generate(jnp.asarray(prompt)[None],
+                                   2)).ravel().tolist()
+    for chunk in (1, 4, 8):
+        eng = Engine(CFG, params, max_len=32, n_slots=2,
+                     prefill_chunk=chunk)
+        rid = eng.submit(prompt, sampling=SamplingParams(
+            max_new=6, stop_sequences=(tuple(g),)))
+        comp = eng.run()[rid]
+        assert comp.finish_reason == "stop", chunk
+        assert list(comp.tokens) == g
+
+
+def test_collect_single_vs_bulk_consistency():
+    params = init_params(KEY, CFG)
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(KEY, i),
+                                             (4 + i,), 0, CFG.vocab_size))
+               for i in range(3)]
+    eng = Engine(CFG, params, max_len=32, n_slots=2)
+    rids = [eng.submit(p, sampling=SamplingParams(max_new=3))
+            for p in prompts]
+    while eng.has_work:
+        eng.step()
+    one = eng.collect(rids[0])                # single pop
+    assert one.rid == rids[0] and len(one.tokens) == 3
+    assert eng.collect(rids[0]) is None       # popped
+    rest = eng.collect()                      # bulk pops the remainder
+    assert set(rest) == set(rids[1:])
+    assert all(rest[r].rid == r for r in rest)
+    assert eng.collect() == {}
+    # bulk on a second engine returns the same Completions contents
+    eng2 = Engine(CFG, params, max_len=32, n_slots=2)
+    rids2 = [eng2.submit(p, sampling=SamplingParams(max_new=3))
+             for p in prompts]
+    bulk = eng2.run()
+    assert list(bulk[rids2[0]].tokens) == list(one.tokens)
+    for r, r2 in zip(rids[1:], rids2[1:]):
+        assert list(rest[r].tokens) == list(bulk[r2].tokens)
+
+
+def test_completion_timing_fields_are_ordered():
+    params = init_params(KEY, CFG)
+    prompt = np.asarray(jax.random.randint(KEY, (5,), 0, CFG.vocab_size))
+    eng = Engine(CFG, params, max_len=32, n_slots=1)
+    rid = eng.submit(prompt, sampling=SamplingParams(max_new=3))
+    comp = eng.run()[rid]
+    assert comp.submitted_at <= comp.first_token_at <= comp.finished_at
+    assert comp.ttft_s >= 0.0 and comp.latency_s >= comp.ttft_s
+    assert comp.prompt_len == len(prompt)
+
+
+# ---------------------------------------------------------------------------
+# deprecated submit() shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_submit_shim_warns_and_matches_v2():
+    params = init_params(KEY, CFG)
+    prompt = np.asarray(jax.random.randint(KEY, (6,), 0, CFG.vocab_size))
+    eos = 3
+    new = Engine(CFG, params, max_len=32, n_slots=2)
+    rid_new = new.submit(prompt, sampling=SamplingParams(
+        max_new=5, temperature=0.9, eos_id=eos, seed=17))
+    want = new.run()[rid_new]
+
+    old = Engine(CFG, params, max_len=32, n_slots=2)
+    with pytest.warns(DeprecationWarning, match="SamplingParams"):
+        rid_old = old.submit(prompt, 5, temperature=0.9, eos_id=eos,
+                             seed=17)
+    got = old.run()[rid_old]
+    assert list(got.tokens) == list(want.tokens)    # token-for-token
+    assert got.finish_reason == want.finish_reason
+
+
+def test_submit_rejects_mixed_and_missing_forms():
+    params = init_params(KEY, CFG)
+    eng = Engine(CFG, params, max_len=32, n_slots=1)
+    with pytest.raises(TypeError):
+        eng.submit([1, 2])                          # neither form
+    with pytest.raises(TypeError):
+        eng.submit([1, 2], 4, sampling=SamplingParams(max_new=4))
+    prompts = jax.random.randint(KEY, (1, 4), 0, CFG.vocab_size)
+    with pytest.raises(TypeError):                  # mixed generate form
+        eng.generate(prompts, sampling=SamplingParams(max_new=2),
+                     key=KEY)
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+def test_stream_yields_per_step_deltas_matching_completions():
+    params = init_params(KEY, CFG)
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(KEY, i),
+                                             (3 + 2 * i,), 0,
+                                             CFG.vocab_size))
+               for i in range(3)]
+    n_news = [3, 5, 2]
+    eng = Engine(CFG, params, max_len=32, n_slots=2)
+    rids = [eng.submit(p, sampling=SamplingParams(max_new=n))
+            for p, n in zip(prompts, n_news)]
+    deltas = list(eng.stream())
+    per_rid = {r: [] for r in rids}
+    for rid, tok in deltas:
+        per_rid[rid].append(tok)
+    out = eng.collect()
+    assert len(deltas) == sum(n_news)
+    for r in rids:
+        assert per_rid[r] == list(out[r].tokens)
+
+
+# ---------------------------------------------------------------------------
+# logprobs
+# ---------------------------------------------------------------------------
+
+def test_greedy_logprobs_match_forward_log_softmax():
+    params = init_params(KEY, CFG)
+    prompt = jax.random.randint(KEY, (1, 6), 0, CFG.vocab_size)
+    eng = Engine(CFG, params, max_len=32, n_slots=2)
+    rid = eng.submit(np.asarray(prompt[0]), sampling=SamplingParams(
+        max_new=3, logprobs=True))
+    comp = eng.run()[rid]
+    assert comp.logprobs is not None and len(comp.logprobs) == 3
+    seq = jnp.concatenate([prompt, jnp.asarray([comp.tokens])], axis=1)
+    logits, _ = forward(params, CFG, seq)
+    for t, (tok, lp) in enumerate(zip(comp.tokens, comp.logprobs)):
+        row = logits[0, prompt.shape[1] + t - 1, :CFG.vocab_size]
+        want = jax.nn.log_softmax(row.astype(jnp.float32))[tok]
+        np.testing.assert_allclose(lp, float(want), rtol=0, atol=2e-5)
+    # logprobs stay None when not requested
+    rid2 = eng.submit(np.asarray(prompt[0]),
+                      sampling=SamplingParams(max_new=2))
+    assert eng.run()[rid2].logprobs is None
+
+
+def test_continuous_with_eos_is_prefix_of_static_stream():
+    """generate() always emits its full fixed-shape stream (eos/stop
+    retirement is a scheduler concern); a continuous request with the
+    same seeded params returns exactly the PREFIX up to its finish
+    reason."""
+    params = init_params(KEY, CFG)
+    prompt = np.asarray(jax.random.randint(KEY, (5,), 0, CFG.vocab_size))
+    sp = SamplingParams(max_new=8, temperature=0.9, seed=42)
+    static = Engine(CFG, params, max_len=32)
+    stream = np.asarray(static.generate(jnp.asarray(prompt)[None],
+                                        sampling=sp)).ravel().tolist()
+    # retire at the latest stream position whose token value has no
+    # earlier occurrence (eos matching fires on the FIRST occurrence)
+    cut = max(i for i, t in enumerate(stream) if t not in stream[:i])
+    sp_eos = SamplingParams(max_new=8, temperature=0.9, seed=42,
+                            eos_id=stream[cut])
+    eng = Engine(CFG, params, max_len=32, n_slots=2)
+    rid = eng.submit(prompt, sampling=sp_eos)
+    comp = eng.run()[rid]
+    assert comp.finish_reason == "eos"     # eos wins even at max_new
+    assert list(comp.tokens) == stream[:cut + 1]
+
+
+def test_generate_caps_n_new_at_max_new():
+    params = init_params(KEY, CFG)
+    prompts = jax.random.randint(KEY, (1, 4), 0, CFG.vocab_size)
+    eng = Engine(CFG, params, max_len=32)
+    out = eng.generate(prompts, 10,
+                       sampling=SamplingParams(max_new=4))
+    assert out.shape == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# kv_bucket regression (satellite: lo <= 0 used to loop forever)
+# ---------------------------------------------------------------------------
+
+def test_kv_bucket_validates_floor():
+    assert kv_bucket(5, 1, 64) == 8
+    assert kv_bucket(5, 32, 64) == 32
+    assert kv_bucket(100, 32, 64) == 64
+    for lo in (0, -4):
+        with pytest.raises(ValueError, match=">= 1"):
+            kv_bucket(5, lo, 64)
+    with pytest.raises(ValueError, match="kv_bucket_min"):
+        Engine(CFG, {}, max_len=16, kv_bucket_min=0)

@@ -1,15 +1,20 @@
 """SlotScheduler unit tests: admission, retirement, slot recycling, and
-engine-level EOS handling."""
+finish-reason tracking under the v2 SamplingParams request contract."""
 import pytest
 
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import SlotScheduler
+
+
+def _sp(max_new, **kw):
+    return SamplingParams(max_new=max_new, **kw)
 
 
 def test_admission_fifo_into_free_slots():
     s = SlotScheduler(n_slots=2, max_len=32)
-    r0 = s.submit([1, 2, 3], 4)
-    r1 = s.submit([4, 5], 4)
-    r2 = s.submit([6], 4)
+    r0 = s.submit([1, 2, 3], _sp(4))
+    r1 = s.submit([4, 5], _sp(4))
+    r2 = s.submit([6], _sp(4))
     admitted = s.admit()
     assert [st.request.rid for st in admitted] == [r0, r1]
     assert set(s.active) == {0, 1}
@@ -22,13 +27,14 @@ def test_admission_fifo_into_free_slots():
 
 def test_retirement_frees_and_recycles_slot():
     s = SlotScheduler(n_slots=1, max_len=32)
-    r0 = s.submit([1, 2], 2)
-    r1 = s.submit([3], 2)
+    r0 = s.submit([1, 2], _sp(2))
+    r1 = s.submit([3], _sp(2))
     (st0,) = s.admit()
     assert st0.slot == 0 and st0.request.rid == r0
     st0.note_token(7)
     st0.note_token(8)
     assert st0.should_retire()
+    assert st0.finish_reason == "length"
     s.retire(0)
     assert s.n_free == 1 and r0 in s.finished
     # recycled: next queued request lands in the SAME slot
@@ -39,7 +45,7 @@ def test_retirement_frees_and_recycles_slot():
 
 def test_prefill_decode_phase_transitions():
     s = SlotScheduler(n_slots=1, max_len=32)
-    s.submit([10, 11, 12], 2)
+    s.submit([10, 11, 12], _sp(2))
     (st,) = s.admit()
     # feeding prompt tokens one per step; sampling starts at the LAST one
     assert st.next_token() == 10 and not st.samples_this_step
@@ -56,31 +62,57 @@ def test_prefill_decode_phase_transitions():
     assert st.should_retire()
 
 
-def test_eos_retires_early():
+def test_eos_retires_early_with_reason():
     s = SlotScheduler(n_slots=1, max_len=32)
-    s.submit([1], 10, eos_id=42)
+    s.submit([1], _sp(10, eos_id=42))
     (st,) = s.admit()
     st.note_token(5)
     assert not st.should_retire()
     st.note_token(42)
     assert st.should_retire()
+    assert st.finish_reason == "eos"
+
+
+def test_stop_token_and_sequence_retire_with_reason():
+    s = SlotScheduler(n_slots=2, max_len=32)
+    s.submit([1], _sp(10, stop_token_ids=(9,)))
+    s.submit([1], _sp(10, stop_sequences=((4, 5),)))
+    st_tok, st_seq = s.admit()
+    st_tok.note_token(9)
+    assert st_tok.should_retire() and st_tok.finish_reason == "stop"
+    st_seq.note_token(4)
+    assert not st_seq.should_retire()
+    st_seq.note_token(5)
+    assert st_seq.should_retire() and st_seq.finish_reason == "stop"
 
 
 def test_submit_validation():
     s = SlotScheduler(n_slots=1, max_len=8)
     with pytest.raises(ValueError):
-        s.submit([], 2)                    # empty prompt
+        s.submit([], _sp(2))                   # empty prompt
     with pytest.raises(ValueError):
-        s.submit([1, 2], 0)                # no tokens requested
+        _sp(0)                                 # no tokens requested
     with pytest.raises(ValueError):
-        s.submit([1, 2, 3, 4, 5], 4)       # 5 + 4 > max_len
-    s.submit([1, 2, 3, 4], 4)              # == max_len is fine
+        s.submit([1, 2, 3, 4, 5], _sp(4))      # 5 + 4 > max_len
+    s.submit([1, 2, 3, 4], _sp(4))             # == max_len is fine
+
+
+def test_request_timing_is_recorded():
+    s = SlotScheduler(n_slots=1, max_len=32)
+    rid = s.submit([1, 2], _sp(1))
+    (st,) = s.admit()
+    assert st.request.arrival > 0.0
+    st.note_token(5)
+    assert st.t_first >= st.request.arrival
+    assert st.should_retire()
+    s.retire(0)
+    assert s.finished[rid].t_done >= st.t_first
 
 
 def test_pop_finished_single_and_bulk():
     s = SlotScheduler(n_slots=2, max_len=16)
-    ra = s.submit([1], 1)
-    rb = s.submit([2], 1)
+    ra = s.submit([1], _sp(1))
+    rb = s.submit([2], _sp(1))
     s.admit()
     for slot in list(s.active):
         s.active[slot].note_token(0)

@@ -4,7 +4,9 @@ The continuous-batching oracle: N staggered requests pushed through
 submit()/step()/collect() must produce EXACTLY the tokens of N
 independent static generate() calls — per-slot decode at mixed depths,
 slot recycling, ring caches, and drop-free MoE decode routing all have
-to hold for this to be true.
+to hold for this to be true. Under the v2 request API both paths run the
+SAME on-device sampler (serve/sampling.sample_rows), so the oracle holds
+for seeded sampling (temperature/top-k/top-p), not just greedy.
 """
 import jax
 import jax.numpy as jnp
@@ -15,6 +17,7 @@ from repro.config import (AltUpConfig, MLAConfig, ModelConfig, MoEConfig,
                           RWKVConfig, SSMConfig)
 from repro.models.transformer import init_params, forward
 from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingParams
 
 CFG = ModelConfig(name="srv", family="dense", n_layers=2, d_model=32,
                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
@@ -64,6 +67,12 @@ ORACLE_CFGS = {
     "fused-altup": CFG.replace(name="srv-fused", fused_decode_altup=True),
 }
 
+# seeded-sampling oracle subset: one config per mechanism that could
+# break per-request key/filter isolation (dense baseline, ring cache,
+# drop-free MoE routing, recurrent state, the ragged Pallas kernel)
+SAMPLED_ORACLE = ("dense-altup", "dense-windowed", "moe", "rwkv",
+                  "ragged-gqa")
+
 
 def test_greedy_decode_matches_forward_argmax():
     params = init_params(KEY, CFG)
@@ -85,9 +94,14 @@ def test_temperature_sampling_in_vocab():
     params = init_params(KEY, CFG)
     prompts = jax.random.randint(KEY, (2, 4), 0, CFG.vocab_size)
     eng = Engine(CFG, params, max_len=16)
+    # legacy (temperature, key) surface and the v2 SamplingParams surface
     out = eng.generate(prompts, n_new=6, temperature=1.0, key=KEY)
-    assert int(out.max()) < CFG.vocab_size
-    assert int(out.min()) >= 0
+    out2 = eng.generate(prompts, sampling=SamplingParams(
+        max_new=6, temperature=1.0, top_k=32, top_p=0.9, seed=11))
+    for o in (out, out2):
+        assert int(o.max()) < CFG.vocab_size
+        assert int(o.min()) >= 0
+        assert o.shape == (2, 6)
 
 
 @pytest.mark.parametrize("name", list(ORACLE_CFGS))
@@ -109,16 +123,52 @@ def test_continuous_batching_oracle(name):
     # 2 slots for 4 requests, staggered arrivals -> in-flight batching,
     # mixed depths, retirement + slot recycling all exercised
     eng = Engine(cfg, params, max_len=32, n_slots=2)
-    rids = [eng.submit(prompts[0], n_news[0]),
-            eng.submit(prompts[1], n_news[1])]
+    rids = [eng.submit(prompts[0], sampling=SamplingParams(max_new=n_news[0])),
+            eng.submit(prompts[1], sampling=SamplingParams(max_new=n_news[1]))]
     eng.step()
     eng.step()
-    rids.append(eng.submit(prompts[2], n_news[2]))
+    rids.append(eng.submit(prompts[2],
+                           sampling=SamplingParams(max_new=n_news[2])))
     eng.step()
-    rids.append(eng.submit(prompts[3], n_news[3]))
+    rids.append(eng.submit(prompts[3],
+                           sampling=SamplingParams(max_new=n_news[3])))
     out = eng.run()
-    got = [out[r] for r in rids]
+    got = [list(out[r].tokens) for r in rids]
     assert got == want, (name, got, want)
+    assert all(out[r].finish_reason == "length" for r in rids)
+
+
+@pytest.mark.parametrize("name", SAMPLED_ORACLE)
+def test_seeded_sampled_oracle(name):
+    """Seeded sampled continuous decode == seeded B=1 static generate(),
+    token-for-token, AND run-to-run reproducible: both paths share one
+    on-device sampler under per-request fold_in(key(seed), t) keys, so
+    a request's stream is independent of batch composition, slot
+    placement and recycling."""
+    cfg = ORACLE_CFGS[name]
+    params = init_params(KEY, cfg)
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(KEY, 30 + i),
+                                             (3 + 2 * i,), 0,
+                                             cfg.vocab_size))
+               for i in range(3)]
+    sps = [SamplingParams(max_new=4, temperature=0.9, seed=100),
+           SamplingParams(max_new=5, temperature=1.2, top_k=24,
+                          seed=200),
+           SamplingParams(max_new=3, temperature=0.8, top_p=0.9,
+                          seed=300)]
+    static = Engine(cfg, params, max_len=32)
+    want = [np.asarray(static.generate(jnp.asarray(p)[None], sampling=sp))
+            .ravel().tolist() for p, sp in zip(prompts, sps)]
+
+    def run_once():
+        eng = Engine(cfg, params, max_len=32, n_slots=2)
+        rids = [eng.submit(p, sampling=sp) for p, sp in zip(prompts, sps)]
+        out = eng.run()
+        return [list(out[r].tokens) for r in rids]
+
+    got = run_once()
+    assert got == want, (name, got, want)
+    assert run_once() == got          # run-to-run reproducible
 
 
 def test_chunked_prefill_oracle_long_prompts():
@@ -136,13 +186,14 @@ def test_chunked_prefill_oracle_long_prompts():
     for chunk in (1, 4, 8):
         eng = Engine(cfg, params, max_len=32, n_slots=2,
                      prefill_chunk=chunk)
-        rids = [eng.submit(p, n) for p, n in zip(prompts, n_news)]
+        rids = [eng.submit(p, sampling=SamplingParams(max_new=n))
+                for p, n in zip(prompts, n_news)]
         out = eng.run()
-        assert [out[r] for r in rids] == want, chunk
+        assert [list(out[r].tokens) for r in rids] == want, chunk
     # a 17-token prompt at chunk=4 costs ceil(17/4)=5 fused steps (the
     # last chunk carries the final prompt token AND samples), not 17
     eng = Engine(cfg, params, max_len=32, n_slots=2, prefill_chunk=4)
-    eng.submit(prompts[2], 1)
+    eng.submit(prompts[2], sampling=SamplingParams(max_new=1))
     steps = 0
     while eng.has_work:
         eng.step()
@@ -160,8 +211,8 @@ def test_kv_bucket_slicing_is_exact():
     for kv_buckets in (True, False):
         eng = Engine(CFG, params, max_len=64, n_slots=2,
                      kv_buckets=kv_buckets)
-        rid = eng.submit(prompt, 5)
-        outs.append(eng.run()[rid])
+        rid = eng.submit(prompt, sampling=SamplingParams(max_new=5))
+        outs.append(list(eng.run()[rid].tokens))
         # the first sampled token rides on the last prefill chunk, so
         # decode-phase steps feed the remaining 4 generated tokens
         assert eng.stats["decode_tokens"] == 4
@@ -176,25 +227,32 @@ def test_eos_retirement_and_slot_reuse():
     first = int(np.asarray(static.generate(jnp.asarray(prompt)[None], 1))[0, 0])
 
     eng = Engine(CFG, params, max_len=32, n_slots=1)
-    rid0 = eng.submit(prompt, 10, eos_id=first)     # retires after 1 token
-    rid1 = eng.submit(prompt, 3)                    # recycles the slot
+    # retires after 1 token with finish_reason "eos"
+    rid0 = eng.submit(prompt, sampling=SamplingParams(max_new=10,
+                                                      eos_id=first))
+    rid1 = eng.submit(prompt, sampling=SamplingParams(max_new=3))
     out = eng.run()
-    assert out[rid0] == [first]
-    assert len(out[rid1]) == 3 and out[rid1][0] == first
+    assert list(out[rid0].tokens) == [first]
+    assert out[rid0].finish_reason == "eos"
+    assert len(out[rid1].tokens) == 3 and out[rid1].tokens[0] == first
+    assert out[rid1].finish_reason == "length"
 
 
 def test_continuous_temperature_sampling_in_vocab():
     params = init_params(KEY, CFG)
     prompt = np.asarray(jax.random.randint(KEY, (4,), 0, CFG.vocab_size))
     eng = Engine(CFG, params, max_len=32, n_slots=2)
-    rid = eng.submit(prompt, 6, temperature=1.0, seed=7)
+    rid = eng.submit(prompt, sampling=SamplingParams(
+        max_new=6, temperature=1.0, seed=7))
     out = eng.run()
-    assert len(out[rid]) == 6
-    assert all(0 <= t < CFG.vocab_size for t in out[rid])
+    assert len(out[rid].tokens) == 6
+    assert all(0 <= t < CFG.vocab_size for t in out[rid].tokens)
 
 
 def test_slot_caches_shard_under_mesh():
-    """cache_shardings places slot caches; engine output is unchanged."""
+    """cache_shardings places slot caches (and sampling_param_shardings
+    the per-slot sampling state); engine output is unchanged — including
+    seeded sampling under the mesh."""
     from repro.models.decode import init_cache
     from repro.sharding import cache_shardings
     mesh = jax.sharding.Mesh(
@@ -207,10 +265,11 @@ def test_slot_caches_shard_under_mesh():
         assert isinstance(leaf, jax.sharding.NamedSharding)
 
     prompt = np.asarray(jax.random.randint(KEY, (4,), 0, CFG.vocab_size))
+    sp = SamplingParams(max_new=3, temperature=0.9, top_k=16, seed=5)
     ref = Engine(CFG, params, max_len=16, n_slots=2)
-    r0 = ref.submit(prompt, 3)
-    want = ref.run()[r0]
+    r0 = ref.submit(prompt, sampling=sp)
+    want = list(ref.run()[r0].tokens)
     eng = Engine(CFG, params, max_len=16, n_slots=2, mesh=mesh)
-    r1 = eng.submit(prompt, 3)
-    got = eng.run()[r1]
+    r1 = eng.submit(prompt, sampling=sp)
+    got = list(eng.run()[r1].tokens)
     assert got == want

@@ -25,14 +25,21 @@ TOP_KEYS = (
     "static", "continuous", "continuous_int8",
     "throughput_speedup", "int8_tokens_per_s_delta",
     "kv_bytes_per_token_by_dtype", "host_transfer_bytes_per_step",
+    "shared_prefix",
 )
 RUN_KEYS = ("name", "tokens_per_s", "ms_per_token_p50",
             "ms_per_token_p99", "makespan_s")
 CONTINUOUS_KEYS = RUN_KEYS + ("prefill_s", "decode_s", "prefill_tokens",
-                              "decode_tokens", "fused_steps")
+                              "decode_tokens", "fused_steps",
+                              "prefix_hits", "hit_rate",
+                              "prefill_tokens_saved",
+                              "prefill_tokens_saved_frac")
 KV_DTYPES = ("auto", "bf16", "int8", "fp8")
 HOST_TRANSFER_KEYS = ("v1_logits_rows", "v2_sampled_ids",
                       "v2_with_logprobs")
+SHARED_PREFIX_KEYS = ("sys_len", "no_prefix_cache", "prefix_cache",
+                      "hit_rate", "prefill_tokens_saved",
+                      "prefill_tokens_saved_frac", "prefix_speedup")
 
 
 def check(path: str) -> None:
@@ -57,6 +64,26 @@ def check(path: str) -> None:
         f"{path}: v2 per-step host bytes not below the v1 logits rows"
     assert hx["v2_sampled_ids"] == payload["n_slots"] * 4, \
         f"{path}: v2 bytes/step should be 4 bytes per slot (int32 ids)"
+    # prefix caching on the shared-system-prompt trace: both runs carry
+    # the continuous run schema; the hit fields are deterministic by
+    # trace construction (every request shares the warmed sys prompt),
+    # so hit_rate / tokens-saved are hard-gated — only the measured
+    # speedup is timing-dependent and merely required to be present
+    sp = payload["shared_prefix"]
+    missing = [k for k in SHARED_PREFIX_KEYS if k not in sp]
+    assert not missing, f"{path}: shared_prefix missing keys {missing}"
+    for run in ("no_prefix_cache", "prefix_cache"):
+        missing = [k for k in CONTINUOUS_KEYS if k not in sp[run]]
+        assert not missing, \
+            f"{path}: shared_prefix[{run}] missing keys {missing}"
+    assert sp["no_prefix_cache"]["prefix_hits"] == 0, \
+        f"{path}: the prefix_cache=False run cannot record hits"
+    assert 0.5 <= sp["hit_rate"] <= 1.0, \
+        f"{path}: shared-trace hit_rate {sp['hit_rate']} out of range"
+    assert 0.8 <= sp["prefill_tokens_saved_frac"] <= 1.0, \
+        f"{path}: expected >=80% prefill tokens saved on the shared " \
+        f"trace, got {sp['prefill_tokens_saved_frac']:.2f}"
+    assert sp["prefix_speedup"] > 0, f"{path}: bad prefix_speedup"
     print(f"ok: {path}")
 
 

@@ -23,6 +23,16 @@ numpy; the v2 fused on-device sampler transfers only the (B,) sampled
 int32 ids (+ (B,) f32 chosen-token logprobs when requested) —
 `host_transfer_bytes_per_step` in BENCH_serve.json.
 
+A second, SHARED-SYSTEM-PROMPT trace (every request = one long shared
+prefix + a short unique suffix — the ROADMAP's millions-of-users
+traffic shape) measures prefix-cache reuse: the same trace replayed
+with Engine(prefix_cache=False) (the PR 4 engine: every shared prefix
+re-prefilled from scratch) vs the default prefix-cache engine (hits
+clone the donor's cache rows and prefill only the suffix). The
+artifact's `shared_prefix` block records both runs plus hit_rate,
+prefill_tokens_saved(_frac) and the tokens/s speedup
+(schema-gated by benchmarks/check_serve_schema.py).
+
   PYTHONPATH=src python -m benchmarks.serve_bench
 """
 from __future__ import annotations
@@ -49,6 +59,9 @@ N_SLOTS = 4
 MAX_LEN = 48
 
 
+SYS_LEN = 32          # shared-prefix trace: system-prompt length
+
+
 def make_trace(n: int = 12, seed: int = 0, rate_hz: float = 40.0):
     """Poisson arrivals with mixed prompt/output lengths."""
     rng = np.random.default_rng(seed)
@@ -62,6 +75,26 @@ def make_trace(n: int = 12, seed: int = 0, rate_hz: float = 40.0):
         trace.append({"arrival": float(arrivals[i]), "prompt": prompt,
                       "n_new": nnew})
     return trace
+
+
+def make_shared_prefix_trace(n: int = 12, seed: int = 1,
+                             rate_hz: float = 40.0, sys_len: int = SYS_LEN):
+    """Poisson arrivals where every prompt = one shared `sys_len`-token
+    system prefix + a 2-4 token unique suffix, with short outputs — the
+    workload where re-prefilling the shared prefix dominates cost."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, CFG.vocab_size, size=sys_len).tolist()
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    arrivals = np.cumsum(gaps)
+    trace = []
+    for i in range(n):
+        sfx = int(rng.integers(2, 5))
+        prompt = sys_prompt + \
+            rng.integers(0, CFG.vocab_size, size=sfx).tolist()
+        nnew = int(rng.integers(3, 6))
+        trace.append({"arrival": float(arrivals[i]), "prompt": prompt,
+                      "n_new": nnew})
+    return trace, sys_prompt
 
 
 def _percentiles(per_tok_ms: List[float]):
@@ -105,18 +138,27 @@ def run_static(params, trace) -> Dict:
             "makespan_s": span}
 
 
-def run_continuous(params, trace, cfg=None, name="continuous") -> Dict:
+def run_continuous(params, trace, cfg=None, name="continuous", *,
+                   prefix_cache=True, warm_prefix=None) -> Dict:
     from repro.serve.engine import Engine
     cfg = cfg or CFG
-    eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=N_SLOTS)
+    eng = Engine(cfg, params, max_len=MAX_LEN, n_slots=N_SLOTS,
+                 prefix_cache=prefix_cache)
     # warm the fused step (compile) outside the timed region — at the
     # trace's max depth, so every kv-len bucket specialization the timed
     # run will hit is already compiled
     depth = max(len(r["prompt"]) + r["n_new"] for r in trace)
-    wid = eng.submit(list(range(2)),
-                     sampling=SamplingParams(max_new=depth - 2))
-    eng.run()
-    eng.collect(wid)
+    eng.submit(list(range(2)), sampling=SamplingParams(max_new=depth - 2))
+    eng.run()                   # drains + pops the warm completion
+    if warm_prefix is not None:
+        # warm the prefix-hit machinery too: a donor request over the
+        # shared system prompt, then one follower that triggers the
+        # jitted copy_prefix + seen-row seeding compiles. The retained
+        # donor also makes the timed run all-hits, which is the steady
+        # state of a long-running server behind one system prompt.
+        for p in (warm_prefix, warm_prefix + [0]):
+            eng.submit(p, sampling=SamplingParams(max_new=1))
+            eng.run()
     eng.reset_stats()                   # keep compile out of the split
     t0 = time.perf_counter()
     pending = list(trace)
@@ -147,6 +189,7 @@ def run_continuous(params, trace, cfg=None, name="continuous") -> Dict:
     p50, p99 = _percentiles(lat_ms)
     span = last_done - trace[0]["arrival"]
     st = eng.stats
+    prompt_tokens = sum(len(r["prompt"]) for r in trace)
     return {"name": name, "tokens_per_s": total_tokens / span,
             "ms_per_token_p50": p50, "ms_per_token_p99": p99,
             "makespan_s": span,
@@ -154,7 +197,13 @@ def run_continuous(params, trace, cfg=None, name="continuous") -> Dict:
             "prefill_s": st["prefill_s"], "decode_s": st["decode_s"],
             "prefill_tokens": st["prefill_tokens"],
             "decode_tokens": st["decode_tokens"],
-            "fused_steps": st["steps"]}
+            "fused_steps": st["steps"],
+            # prefix-cache reuse over the timed trace
+            "prefix_hits": st["prefix_hits"],
+            "hit_rate": st["prefix_hits"] / len(trace),
+            "prefill_tokens_saved": st["prefill_tokens_saved"],
+            "prefill_tokens_saved_frac":
+                st["prefill_tokens_saved"] / max(prompt_tokens, 1)}
 
 
 def run(outdir: str | None = None, n_requests: int = 12) -> List[Dict]:
@@ -168,9 +217,18 @@ def run(outdir: str | None = None, n_requests: int = 12) -> List[Dict]:
     cfg8 = CFG.replace(name="serve-bench-int8", kv_cache_dtype="int8")
     rows.append(run_continuous(params, trace, cfg=cfg8,
                                name="continuous-int8"))
+    # shared-system-prompt trace: prefix-cache OFF (the PR 4 engine —
+    # every request re-prefills the shared prefix) vs ON (hits clone the
+    # donor's rows and prefill only the suffix)
+    ptrace, sys_prompt = make_shared_prefix_trace(n=n_requests)
+    pfx_off = run_continuous(params, ptrace, name="shared-noprefix",
+                             prefix_cache=False)
+    pfx_on = run_continuous(params, ptrace, name="shared-prefix",
+                            prefix_cache=True, warm_prefix=sys_prompt)
+    rows += [pfx_off, pfx_on]
     from benchmarks.common import emit_json
     from repro.roofline.analysis import decode_kv_bytes
-    st, ct, ct8 = rows
+    st, ct, ct8 = rows[:3]
     # bytes/token of one decode step at the trace's final depths, per
     # cache dtype (the roofline model the measured delta should track)
     depths = [min(len(r["prompt"]) + r["n_new"], MAX_LEN) for r in trace]
@@ -191,15 +249,33 @@ def run(outdir: str | None = None, n_requests: int = 12) -> List[Dict]:
             "v2_sampled_ids": N_SLOTS * 4,
             "v2_with_logprobs": N_SLOTS * 8,
         },
+        # prefix-cache reuse on the shared-system-prompt trace: the
+        # tokens/s delta of flipping Engine(prefix_cache=...) alone
+        "shared_prefix": {
+            "sys_len": len(sys_prompt),
+            "no_prefix_cache": pfx_off,
+            "prefix_cache": pfx_on,
+            "hit_rate": pfx_on["hit_rate"],
+            "prefill_tokens_saved": pfx_on["prefill_tokens_saved"],
+            "prefill_tokens_saved_frac":
+                pfx_on["prefill_tokens_saved_frac"],
+            "prefix_speedup":
+                pfx_on["tokens_per_s"] / pfx_off["tokens_per_s"],
+        },
     }
     path = emit_json(payload, "BENCH_serve.json", outdir)
     pf, dc = ct.get("prefill_s", 0.0), ct.get("decode_s", 0.0)
     hx = payload["host_transfer_bytes_per_step"]
+    sp = payload["shared_prefix"]
     print(f"# wrote {path} (continuous/static tokens/s = "
           f"{payload['throughput_speedup']:.2f}x; int8 cache delta = "
           f"{payload['int8_tokens_per_s_delta']:.2f}x; continuous time "
           f"split prefill={pf:.3f}s decode={dc:.3f}s; host bytes/step "
-          f"{hx['v1_logits_rows']} -> {hx['v2_sampled_ids']})")
+          f"{hx['v1_logits_rows']} -> {hx['v2_sampled_ids']}; shared-"
+          f"prefix trace {sp['prefix_speedup']:.2f}x tokens/s at "
+          f"hit_rate={sp['hit_rate']:.2f}, "
+          f"{100 * sp['prefill_tokens_saved_frac']:.0f}% prefill "
+          f"tokens saved)")
     return rows
 
 

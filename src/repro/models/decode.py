@@ -611,6 +611,61 @@ _RECURRENT_LEAVES = ("wkv", "shift_tm", "shift_cm", "ssm", "conv")
 _SCALE_LEAVES = ("k_scale", "v_scale", "latent_scale")
 
 
+def copy_prefix(caches, dst, src, p, *, copy_recurrent=False):
+    """Clone the first `p` cache positions of slot `src` into slot `dst`
+    across every cache leaf — the jitted slot-to-slot copy behind the
+    engine's prefix-cache hits (serve/scheduler.PrefixIndex).
+
+    dst/src/p are traced scalars, so ONE compilation covers every hit at
+    every prefix length. Row-indexed leaves — attention k/v, MLA latents,
+    and their quantized scale siblings (codes and scales copy in
+    LOCKSTEP, so an int8/fp8 prefix reuses without a dequant round-trip)
+    — copy rows < min(p, Tc): for a full-length cache that is rows
+    0..p-1; for a W-slot ring cache the copy collapses to the last
+    min(p, W) prefix positions, whose ring indices q % W are exactly
+    rows 0..min(p,W)-1 under the engine's donor-validity rule (donor
+    depth <= max(p, W): the donor never wrapped past the prefix, so the
+    wraparound linearization is the identity and no remap is needed).
+    Recurrent leaves (rwkv/mamba state) have no position axis;
+    copy_recurrent=True clones the whole slot state, which is exact only
+    when the donor stopped at the prefix boundary (depth == p — the
+    engine's recurrent validity gate). src == dst is a no-op (the
+    self-donor admission path reuses an evicted donor's rows in place).
+    """
+    dst = jnp.asarray(dst, jnp.int32)
+    src = jnp.asarray(src, jnp.int32)
+    p = jnp.asarray(p, jnp.int32)
+
+    def rows_copy(leaf, b_ax, t_ax):
+        Tc = leaf.shape[t_ax]
+        keep = jnp.arange(Tc) < jnp.minimum(p, Tc)
+        shape = [1] * (leaf.ndim - 1)          # b_ax < t_ax for all leaves
+        shape[t_ax - 1] = Tc
+        src_rows = jnp.take(leaf, src, axis=b_ax)
+        dst_rows = jnp.take(leaf, dst, axis=b_ax)
+        merged = jnp.where(keep.reshape(shape), src_rows, dst_rows)
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, jnp.expand_dims(merged, b_ax), dst, axis=b_ax)
+
+    def copy(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v"):                 # stacked 5-D | shared 4-D
+            return rows_copy(leaf, *((1, 2) if leaf.ndim == 5 else (0, 1)))
+        if name in ("k_scale", "v_scale"):     # stacked 4-D | shared 3-D
+            return rows_copy(leaf, *((1, 2) if leaf.ndim == 4 else (0, 1)))
+        if name in ("latent", "latent_scale"):  # always stacked (n,B,T,.)
+            return rows_copy(leaf, 1, 2)
+        if name in _RECURRENT_LEAVES:          # stacked (n, B, ...)
+            if not copy_recurrent:
+                return leaf
+            state = jnp.take(leaf, src, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, jnp.expand_dims(state, 1), dst, axis=1)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(copy, caches)
+
+
 def reset_slot(caches, slot):
     """Zero one slot's recurrent state (rwkv/mamba) and any quantized-
     cache scale leaves across all segments.

@@ -35,6 +35,18 @@ before/after bytes). Greedy decode is bit-identical to the pre-v2 host
 argmax, and a seeded sampled request is run-to-run reproducible and
 token-identical to a seeded B=1 static generate() with the same params.
 
+Prefix-cache reuse (docs/serving.md "Prefix caching"): admission
+consults the scheduler's host-side PrefixIndex (a trie over admitted
+prompt ids). On a hit against a resident or retained donor slot, the
+jitted models/decode.copy_prefix clones the first p cache rows —
+K/V, ring rows, MLA latents, quantized codes AND scales in lockstep —
+into the new slot, the repetition-penalty seen row is seeded from the
+prefix ids, the slot position starts at p, and only the prompt SUFFIX
+prefills through the chunked path. Hit decode is token-identical to the
+cold path (tests/test_prefix_cache.py oracles); retired slots are
+RETAINED as cached prefixes and LRU-evicted when admission needs
+capacity. Disable with Engine(prefix_cache=False).
+
 Decode-hot-path economics (see docs/kernels.md): the engine passes each
 step's per-slot depths down to the attention layers, which (a) slice the
 cache read to a host-computed power-of-two `kv-len bucket` >= the deepest
@@ -48,7 +60,6 @@ recurrent (rwkv/mamba) and ring-cache (sliding-window) models.
 """
 from __future__ import annotations
 
-import time
 import warnings
 from functools import partial
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -58,24 +69,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models.decode import (decode_sample_step, decode_step,
-                                 init_cache, kv_quant_spec, prefill,
-                                 reset_slot)
+from repro.models.decode import (copy_prefix, decode_sample_step,
+                                 decode_step, init_cache, kv_quant_spec,
+                                 prefill, reset_slot)
 from repro.serve.sampling import (Completion, SamplingParams,
                                   base_key_data, blank_slot_params,
                                   fill_slot_params, key_data_of,
                                   key_width, sample_rows, update_seen)
-from repro.serve.scheduler import SlotScheduler
+from repro.serve.scheduler import SlotScheduler, serve_clock
 
 
 def kv_bucket(needed: int, lo: int, cap: int) -> int:
     """Static kv read-slice length: smallest power-of-two >= needed
     (floored at `lo`, capped at `cap`). Shared by the engine and the
     decode microbench (benchmarks/kernel_bench.py) so the benchmark
-    measures exactly the bucket policy the serving path dispatches."""
+    measures exactly the bucket policy the serving path dispatches.
+
+    needed > cap is an ERROR: the bucket used to clamp silently, which
+    would hand the attention layers a read slice shorter than the fill
+    depth — a truncated cache read with no signal. Requests that cannot
+    fit must be rejected at admission (SlotScheduler.submit's
+    prompt + max_new <= max_len check), never clamped here."""
     if lo < 1:
         raise ValueError(f"kv_bucket floor must be >= 1, got lo={lo} "
                          f"(lo <= 0 never reaches `needed` by doubling)")
+    if needed > cap:
+        raise ValueError(
+            f"kv_bucket: needed={needed} exceeds the cache capacity "
+            f"cap={cap}; a clamped bucket would silently truncate the "
+            f"cache read — reject the request at admission instead")
     b = lo
     while b < needed:
         b *= 2
@@ -85,7 +107,8 @@ def kv_bucket(needed: int, lo: int, cap: int) -> int:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_len: int, *,
                  n_slots: int = 8, mesh=None, prefill_chunk: int = 8,
-                 kv_buckets: bool = True, kv_bucket_min: int = 32):
+                 kv_buckets: bool = True, kv_bucket_min: int = 32,
+                 prefix_cache: bool = True):
         if kv_bucket_min < 1:
             raise ValueError(
                 f"kv_bucket_min must be >= 1, got {kv_bucket_min}")
@@ -94,6 +117,7 @@ class Engine:
         self.n_slots = n_slots
         self._kv_buckets = kv_buckets
         self._kv_bucket_min = kv_bucket_min
+        self._prefix_cache = prefix_cache
         self._prefill_chunk = max(1, prefill_chunk)
         self._step = jax.jit(partial(decode_step, cfg=cfg, mesh=mesh),
                              static_argnames=("kv_len",))
@@ -120,9 +144,12 @@ class Engine:
         self.last_logprobs = None
         # prefill/decode split for benchmarks (benchmarks/serve_bench.py):
         # step time is attributed proportionally to the tokens each phase
-        # consumed in that fused step
+        # consumed in that fused step. prefix_hits / prefill_tokens_saved
+        # count prefix-cache reuse: saved tokens are prompt tokens that
+        # arrived by slot-to-slot copy instead of being prefilled.
         self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0}
+                      "prefill_s": 0.0, "decode_s": 0.0,
+                      "prefix_hits": 0, "prefill_tokens_saved": 0}
 
     def reset_stats(self) -> None:
         """Zero the prefill/decode counters (benchmarks call this after
@@ -141,6 +168,26 @@ class Engine:
     # continuous batching: submit / step / collect / stream
     # ------------------------------------------------------------------
 
+    def _prefix_usable_len(self, p: int, depth: int) -> int:
+        """Model-kind validity of a prefix match (scheduler hook; p is
+        already capped to min(LCP, donor depth, prompt_len - 1)).
+
+        * recurrent segments: the donor's rwkv/mamba state reflects ALL
+          `depth` fed tokens, so reuse is exact only when the donor
+          stopped at the prefix boundary (depth == p).
+        * ring segments (capacity W): a donor that decoded past the
+          prefix overwrote ring rows the prefix still needs once it
+          wraps; rows [max(0, p-W), p) survive iff depth <= max(p, W).
+        """
+        if p <= 0:
+            return 0
+        if self._has_recurrent and depth != p:
+            return 0
+        for W in self._ring_caps:
+            if depth > max(p, W):
+                return 0
+        return p
+
     def _ensure_slots(self):
         if self._sched is not None:
             return
@@ -148,13 +195,33 @@ class Engine:
             raise NotImplementedError(
                 "continuous batching serves decoder-only families; "
                 "use generate() for encoder-decoder models")
-        self._sched = SlotScheduler(self.n_slots, self.max_len)
         # attention/MLA caches self-clean on recycle (per-slot position
         # masking); only recurrent segments need a reset at admission
         from repro.models.transformer import layer_plan
         plan = layer_plan(self.cfg)
         self._has_recurrent = any(s.kind in ("rwkv", "mamba")
                                   for s in plan)
+        self._ring_caps = [min(self.max_len, s.window) for s in plan
+                           if s.kind in ("attn", "shared_attn")
+                           and s.window > 0]
+        self._sched = SlotScheduler(
+            self.n_slots, self.max_len,
+            prefix_cache=self._prefix_cache,
+            prefix_usable_len=self._prefix_usable_len)
+        # slot-to-slot prefix copy (one specialization: dst/src/p traced)
+        # and the seen-row seeding that replays the prefix ids into the
+        # repetition-penalty table exactly as cold prefill would. The
+        # ids ride in as a FIXED (max_len,) int32 array padded with V
+        # (out-of-range -> dropped by the scatter): one compile for every
+        # prefix length, max_len*4 bytes to device per hit — never a
+        # (V,)-sized host row on the admission path
+        self._copy = jax.jit(
+            partial(copy_prefix, copy_recurrent=self._has_recurrent),
+            donate_argnums=(0,))
+        self._seed_seen = jax.jit(
+            lambda s, slot, ids: s.at[slot].set(False)
+                                  .at[slot, ids].set(True, mode="drop"),
+            donate_argnums=(0,))
         # quantized caches also reset at admission: reset_slot zeroes the
         # slot's scale leaves so stale rows dequantize to exact 0 and a
         # NaN/Inf scale from an aborted request cannot survive recycling
@@ -172,6 +239,7 @@ class Engine:
         self._sp_shardings = None
         if self.mesh is not None:
             from repro.sharding import (cache_shardings,
+                                        prefix_copy_shardings,
                                         sampling_param_shardings)
             caches = jax.device_put(
                 caches, cache_shardings(self.cfg, caches, self.mesh))
@@ -180,6 +248,14 @@ class Engine:
                 self.mesh)
             seen = jax.device_put(seen, sh.pop("seen"))
             self._sp_shardings = sh
+            # pin the prefix copy's output to the cache layout: the copy
+            # stays mesh-local (src->dst row movement only, no gather,
+            # no reshard before the next fused step consumes the result)
+            self._copy = jax.jit(
+                partial(copy_prefix, copy_recurrent=self._has_recurrent),
+                donate_argnums=(0,),
+                out_shardings=prefix_copy_shardings(self.cfg, caches,
+                                                    self.mesh))
         self._caches = caches
         self._seen = seen
 
@@ -238,16 +314,42 @@ class Engine:
         if self._sched is None:
             return 0
         for st in self._sched.admit():
+            hit = st.prefix_len > 0
+            self_donor = hit and st.prefix_src == st.slot
             # recycled slots keep stale attention rows (masked out by the
             # per-slot position), but recurrent rwkv/mamba state carries
             # over and must be zeroed — and quantized-cache scale leaves
-            # are cleared so stale rows dequantize to exact zeros.
-            if self._admit_reset:
+            # are cleared so stale rows dequantize to exact zeros. A
+            # SELF-donor hit skips the reset: the slot's own rows ARE the
+            # prefix (zeroing them first would destroy what the in-place
+            # "copy" reuses); its stale rows past the prefix stay masked
+            # by the per-slot position like any recycled slot.
+            if self._admit_reset and not self_donor:
                 self._caches = self._reset(self._caches, st.slot)
-            # the repetition-penalty seen table always resets: it carries
-            # the previous occupant's consumed-token set
-            self._seen = self._clear_seen(self._seen,
-                                          np.int32(st.slot))
+            if hit and not self_donor:
+                # admission order matters: an earlier admission in this
+                # same batch may be this one's donor, and its copy has
+                # already landed by the time we read its rows here
+                self._caches = self._copy(self._caches,
+                                          jnp.int32(st.slot),
+                                          jnp.int32(st.prefix_src),
+                                          jnp.int32(st.prefix_len))
+            # the repetition-penalty seen table always resets (it carries
+            # the previous occupant's consumed-token set); a prefix hit
+            # seeds it with the prefix ids — the exact row cold prefill
+            # would have built by feeding those tokens
+            if hit:
+                ids = np.full((self.max_len,), self.cfg.vocab_size,
+                              np.int32)
+                ids[:st.prefix_len] = st.request.prompt[:st.prefix_len]
+                self._seen = self._seed_seen(self._seen, np.int32(st.slot),
+                                             jnp.asarray(ids))
+                self.stats["prefix_hits"] += 1
+                self.stats["prefill_tokens_saved"] += st.prefix_len
+            else:
+                self._seen = self._clear_seen(self._seen,
+                                              np.int32(st.slot))
+            self._sched.release_donor(st)
         active = dict(self._sched.active)
         self._events = []
         if not active:
@@ -287,7 +389,7 @@ class Engine:
         sp_dev = {k: jnp.asarray(v) for k, v in sparams.items()}
         if self._sp_shardings is not None:
             sp_dev = jax.device_put(sp_dev, self._sp_shardings)
-        t0 = time.perf_counter()
+        t0 = serve_clock()
         ids, lps, self._caches, self._seen = self._fused(
             self.params, self._caches, self._seen, jnp.asarray(tokens),
             jnp.asarray(pos), jnp.asarray(nval), sp_dev,
@@ -295,14 +397,17 @@ class Engine:
             any_sampled=any_sampled)
         ids = np.asarray(ids)                 # (B,) — the only per-step
         lps = np.asarray(lps) if want_lp else None  # device->host pulls
-        dt = time.perf_counter() - t0
+        # ONE clock (serve_clock) for step timing AND token timestamps:
+        # Completion.ttft_s/latency_s are differences against Request
+        # .arrival on the same monotonic base, so they cannot go negative
+        now = serve_clock()
+        dt = now - t0
         total = max(pf_tokens + dec_tokens, 1)
         self.stats["steps"] += 1
         self.stats["prefill_tokens"] += pf_tokens
         self.stats["decode_tokens"] += dec_tokens
         self.stats["prefill_s"] += dt * pf_tokens / total
         self.stats["decode_s"] += dt * dec_tokens / total
-        now = time.monotonic()
         for slot, st in active.items():
             st.advance(int(nval[slot]))
             if not samples[slot]:
@@ -334,6 +439,7 @@ class Engine:
             rid=r.rid, tokens=tuple(st.generated),
             finish_reason=st.finish_reason or "length",
             prompt_len=len(r.prompt),
+            prefix_len=st.prefix_len,
             logprobs=(tuple(st.logprobs) if r.sampling.logprobs
                       else None),
             submitted_at=r.arrival, first_token_at=st.t_first,

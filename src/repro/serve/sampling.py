@@ -115,12 +115,17 @@ class Completion:
     finish_reason records why decoding ended. logprobs (present only
     when SamplingParams.logprobs was set) are the chosen tokens'
     log-probabilities under the model's penalty-adjusted, UNscaled
-    distribution at each step. Timestamps are time.monotonic() seconds.
+    distribution at each step. prefix_len counts the prompt tokens that
+    arrived by prefix-cache copy instead of prefill (0 = cold path; the
+    generated tokens are identical either way). Timestamps are
+    serve/scheduler.serve_clock() seconds — one monotonic clock for
+    every serving timestamp, so ttft_s/latency_s cannot go negative.
     """
     rid: int
     tokens: Tuple[int, ...]
     finish_reason: str
     prompt_len: int = 0
+    prefix_len: int = 0
     logprobs: Optional[Tuple[float, ...]] = None
     submitted_at: float = 0.0
     first_token_at: float = 0.0

@@ -118,6 +118,18 @@ def cache_shardings(cfg: ModelConfig, caches: Any, mesh: Mesh) -> Any:
     return make_shardings(cache_pspecs(cfg, caches, mesh), mesh)
 
 
+def prefix_copy_shardings(cfg: ModelConfig, caches: Any, mesh: Mesh) -> Any:
+    """Output shardings that keep the jitted prefix-cache copy
+    (models/decode.copy_prefix) MESH-LOCAL: the copy is pinned to the
+    same cache layout it consumes (donated input) and produces, so a
+    slot-to-slot clone lowers to row movement between the shards owning
+    the src and dst slots — a local DMA when both live on one device
+    under the ("pod","data") slot sharding, a collective-permute of just
+    the copied rows otherwise — and NEVER a gather of the cache onto one
+    device or a reshard before the next fused step reads the result."""
+    return cache_shardings(cfg, caches, mesh)
+
+
 def sampling_param_shardings(arrs: Any, mesh: Mesh) -> Any:
     """NamedShardings for the serving engine's per-slot sampling state:
     the (B,) SamplingParams arrays (temperature/top_k/top_p/min_p/

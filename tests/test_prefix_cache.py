@@ -1,0 +1,472 @@
+"""Prefix-cache reuse oracles + the PrefixIndex / copy_prefix units.
+
+The correctness bar (ISSUE 5 / docs/serving.md "Prefix caching"):
+prefix-HIT serving is TOKEN-IDENTICAL to cold-path serving — the
+slot-to-slot cache copy (models/decode.copy_prefix: K/V rows, ring rows
+under the donor-validity rule, MLA latents, quantized codes AND scales
+in lockstep, recurrent state at the exact boundary) plus the seeded
+repetition-penalty seen row must reproduce precisely the device state
+cold prefill would have built, for greedy and seeded-sampled requests,
+across dense/GQA/ring/MoE/MLA x fp32/int8/fp8.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (AltUpConfig, MLAConfig, ModelConfig, MoEConfig,
+                          RWKVConfig, SSMConfig)
+from repro.models.decode import copy_prefix, init_cache
+from repro.models.transformer import init_params
+from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import PrefixEntry, PrefixIndex, SlotScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = ModelConfig(name="pfx", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                  altup=AltUpConfig(K=2))
+
+BASE_CFGS = {
+    "dense": CFG,
+    "gqa": CFG.replace(name="pfx-gqa", n_heads=4, n_kv_heads=2),
+    "ring": CFG.replace(name="pfx-win", window_size=4),
+    "moe": ModelConfig(name="pfx-moe", family="moe", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, altup=AltUpConfig(K=2),
+                       moe=MoEConfig(num_experts=4, top_k=2, d_expert=32)),
+    "mla": ModelConfig(name="pfx-mla", family="mla_moe", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, altup=AltUpConfig(K=2),
+                       mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8,
+                                     qk_nope_head_dim=8,
+                                     qk_rope_head_dim=4, v_head_dim=8),
+                       moe=MoEConfig(num_experts=4, top_k=2, d_expert=32,
+                                     first_dense_layers=1, dense_d_ff=64)),
+}
+RWKV_CFG = ModelConfig(name="pfx-rwkv", family="rwkv6", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, altup=AltUpConfig(K=2),
+                       rwkv=RWKVConfig(head_dim=16, decay_lora=8,
+                                       token_shift_lora=8))
+HYBRID_CFG = ModelConfig(name="pfx-hyb", family="hybrid", n_layers=3,
+                         d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                         vocab_size=128, altup=AltUpConfig(K=2),
+                         ssm=SSMConfig(d_state=8, d_conv=4, expand=2,
+                                       head_dim=16, shared_every=2))
+
+
+def _shared_prompts(cfg, n=3, sys_len=8, seed=0):
+    """A shared `sys_len` prefix + short unique suffixes (ids >= 1 so a
+    zero-pad leak into the seen table would be detectable)."""
+    rng = np.random.default_rng(seed)
+    sys = rng.integers(1, cfg.vocab_size, size=sys_len).tolist()
+    return [sys + rng.integers(1, cfg.vocab_size, size=3 + i).tolist()
+            for i in range(n)]
+
+
+def _run_all(eng, prompts, sps):
+    rids = [eng.submit(p, sampling=sp) for p, sp in zip(prompts, sps)]
+    out = eng.run()
+    return [list(out[r].tokens) for r in rids]
+
+
+def _hit_vs_cold(cfg, sps, sys_len=8):
+    """Cold engine (prefix_cache=False) vs warm engine where a first
+    request donates the shared prefix; returns (want, got, warm_engine).
+    The ring donor is made boundary-valid by giving the warm engine a
+    max_new=1 donor over the shared prefix itself."""
+    params = init_params(KEY, cfg)
+    prompts = _shared_prompts(cfg, n=len(sps), sys_len=sys_len)
+    cold = Engine(cfg, params, max_len=32, n_slots=2, prefix_cache=False)
+    want = _run_all(cold, prompts, sps)
+    assert cold.stats["prefix_hits"] == 0
+
+    warm = Engine(cfg, params, max_len=32, n_slots=2)
+    # donor: the shared prefix alone, one token — retires at depth
+    # sys_len, which satisfies every validity rule (ring boundary,
+    # recurrent depth == p) for followers matching the full prefix
+    sys = prompts[0][:sys_len]
+    warm.submit(sys, sampling=SamplingParams(max_new=1))
+    warm.run()
+    got = _run_all(warm, prompts, sps)
+    return want, got, warm
+
+
+@pytest.mark.parametrize("name", list(BASE_CFGS))
+@pytest.mark.parametrize("kind", ["auto", "int8", "fp8"])
+def test_prefix_hit_token_identical_greedy(name, kind):
+    """Greedy hit == cold, across the serving oracle grid x cache dtype
+    (quantized hits copy codes and scale leaves in lockstep — any skew
+    between them changes the dequantized keys and breaks this)."""
+    cfg = BASE_CFGS[name]
+    if kind != "auto":
+        cfg = cfg.replace(name=f"{cfg.name}-{kind}", kv_cache_dtype=kind)
+    sps = [SamplingParams(max_new=n) for n in (3, 4, 2)]
+    want, got, warm = _hit_vs_cold(cfg, sps)
+    assert got == want, (name, kind, got, want)
+    # >= n-1, not n: with only 2 slots, LRU eviction may reclaim the sys
+    # donor for the last follower (which then takes the exact cold path
+    # — ring donors that decoded past the window are invalid anyway)
+    assert warm.stats["prefix_hits"] >= len(sps) - 1, warm.stats
+    assert warm.stats["prefill_tokens_saved"] > 0
+
+
+@pytest.mark.parametrize("name", ["dense", "ring", "moe", "mla"])
+@pytest.mark.parametrize("kind", ["auto", "int8"])
+def test_prefix_hit_token_identical_seeded_sampled(name, kind):
+    """Seeded sampled hit == cold: the per-request fold_in(key(seed), t)
+    streams are position-pure, so inheriting p cache rows by copy (and
+    the seeded seen row driving repetition penalty) may not perturb a
+    single draw."""
+    cfg = BASE_CFGS[name]
+    if kind != "auto":
+        cfg = cfg.replace(name=f"{cfg.name}-{kind}", kv_cache_dtype=kind)
+    sps = [SamplingParams(max_new=4, temperature=0.9, seed=100),
+           SamplingParams(max_new=3, temperature=1.1, top_k=24,
+                          repetition_penalty=1.3, seed=200),
+           SamplingParams(max_new=3, temperature=0.8, top_p=0.9,
+                          seed=300)]
+    want, got, warm = _hit_vs_cold(cfg, sps)
+    assert got == want, (name, kind, got, want)
+    assert warm.stats["prefix_hits"] >= len(sps) - 1, warm.stats
+
+
+def test_ring_donor_past_window_falls_back_cold():
+    """A windowed donor that decoded past the prefix overwrote ring rows
+    the prefix needs — the validity rule (depth <= max(p, W)) must
+    reject it, and the request must take the exact cold path."""
+    cfg = BASE_CFGS["ring"]
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(2)
+    p0 = rng.integers(1, cfg.vocab_size, size=6).tolist()
+    p1 = p0 + rng.integers(1, cfg.vocab_size, size=3).tolist()
+    cold = Engine(cfg, params, max_len=32, n_slots=2, prefix_cache=False)
+    a = cold.submit(p1, sampling=SamplingParams(max_new=3))
+    want = list(cold.run()[a].tokens)
+
+    warm = Engine(cfg, params, max_len=32, n_slots=2)
+    warm.submit(p0, sampling=SamplingParams(max_new=6))   # depth 11 > max(6, 4)
+    warm.run()
+    b = warm.submit(p1, sampling=SamplingParams(max_new=3))
+    got = list(warm.run()[b].tokens)
+    assert warm.stats["prefix_hits"] == 0, warm.stats
+    assert got == want
+
+    # boundary-valid donor (depth == p == 6 > W: the full wrapped ring
+    # holds exactly the last W prefix positions) DOES hit, still exact
+    warm2 = Engine(cfg, params, max_len=32, n_slots=2)
+    warm2.submit(p0, sampling=SamplingParams(max_new=1))  # depth 6
+    warm2.run()
+    b2 = warm2.submit(p1, sampling=SamplingParams(max_new=3))
+    got2 = list(warm2.run()[b2].tokens)
+    assert warm2.stats["prefix_hits"] == 1, warm2.stats
+    assert got2 == want
+
+
+@pytest.mark.parametrize("cfg", [RWKV_CFG, HYBRID_CFG],
+                         ids=["rwkv", "hybrid"])
+def test_recurrent_hits_only_at_exact_boundary(cfg):
+    """Recurrent state reflects ALL the donor's fed tokens, so reuse is
+    exact only when the donor stopped at the prefix boundary (depth ==
+    p): a max_new=1 donor over the shared prefix hits (state copied),
+    any donor that decoded further must fall back cold. Both exact."""
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(3)
+    p0 = rng.integers(1, cfg.vocab_size, size=6).tolist()
+    p1 = p0 + rng.integers(1, cfg.vocab_size, size=3).tolist()
+    cold = Engine(cfg, params, max_len=32, n_slots=2, prefix_cache=False)
+    a = cold.submit(p1, sampling=SamplingParams(max_new=3))
+    want = list(cold.run()[a].tokens)
+
+    warm = Engine(cfg, params, max_len=32, n_slots=2)
+    warm.submit(p0, sampling=SamplingParams(max_new=1))   # depth == 6 == p
+    warm.run()
+    b = warm.submit(p1, sampling=SamplingParams(max_new=3))
+    assert list(warm.run()[b].tokens) == want
+    assert warm.stats["prefix_hits"] == 1, warm.stats
+
+    warm2 = Engine(cfg, params, max_len=32, n_slots=2)
+    warm2.submit(p0, sampling=SamplingParams(max_new=4))  # depth 9 != p
+    warm2.run()
+    b2 = warm2.submit(p1, sampling=SamplingParams(max_new=3))
+    assert list(warm2.run()[b2].tokens) == want
+    assert warm2.stats["prefix_hits"] == 0, warm2.stats
+
+
+def test_self_donor_reuses_evicted_slot_in_place():
+    """n_slots=1: the retained donor IS the only slot, so admission
+    hands it to the matching request (src == dst, copy is a no-op, the
+    admission reset is skipped) — the classic same-prompt-again case."""
+    params = init_params(KEY, CFG.replace(kv_cache_dtype="int8"))
+    cfg = CFG.replace(kv_cache_dtype="int8")
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, cfg.vocab_size, size=6).tolist()
+    eng = Engine(cfg, params, max_len=32, n_slots=1)
+    r0 = eng.submit(prompt, sampling=SamplingParams(max_new=3))
+    r1 = eng.submit(prompt, sampling=SamplingParams(max_new=3))
+    out = eng.run()
+    assert list(out[r0].tokens) == list(out[r1].tokens)
+    assert eng.stats["prefix_hits"] == 1
+    assert out[r1].prefix_len == len(prompt) - 1
+    assert out[r0].prefix_len == 0
+
+
+def test_seen_table_hit_matches_cold(monkeypatch=None):
+    """Satellite audit: a prefix hit seeds the repetition-penalty seen
+    row from the prefix ids; after the request runs, its row must equal
+    the cold row bit-for-bit (prompt u fed-generated ids, no padding
+    leak from partial final chunks — prompt length 9 with chunk 4 leaves
+    a 1-valid + 3-padded chunk)."""
+    params = init_params(KEY, CFG)
+    rng = np.random.default_rng(5)
+    sys = rng.integers(1, CFG.vocab_size, size=6).tolist()
+    prompt = sys + rng.integers(1, CFG.vocab_size, size=3).tolist()
+    sp = SamplingParams(max_new=3, repetition_penalty=1.5)
+
+    cold = Engine(CFG, params, max_len=32, n_slots=1, prefix_cache=False,
+                  prefill_chunk=4)
+    rc = cold.submit(prompt, sampling=sp)
+    comp_c = cold.run()[rc]
+    cold_row = np.asarray(cold._seen)[0]
+
+    warm = Engine(CFG, params, max_len=32, n_slots=2, prefill_chunk=4)
+    warm.submit(sys, sampling=SamplingParams(max_new=1))
+    warm.run()                                  # donor retained in slot 0
+    rw = warm.submit(prompt, sampling=sp)
+    comp_w = warm.run()[rw]
+    assert warm.stats["prefix_hits"] == 1
+    warm_row = np.asarray(warm._seen)[1]        # hit landed in slot 1
+
+    assert list(comp_w.tokens) == list(comp_c.tokens)
+    np.testing.assert_array_equal(warm_row, cold_row)
+    # and the row is exactly the fed-token set: prompt + generated[:-1]
+    fed = set(prompt) | set(comp_c.tokens[:-1])
+    np.testing.assert_array_equal(
+        np.nonzero(cold_row)[0], np.asarray(sorted(fed)))
+
+
+# ---------------------------------------------------------------------------
+# copy_prefix unit: per-leaf row semantics
+# ---------------------------------------------------------------------------
+
+def _filled(caches):
+    """Distinct values per (slot, row): slot*100 + row (broadcast over
+    trailing dims) for row-indexed leaves; slot*100 for recurrent."""
+    def fill(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        stacked = leaf.ndim >= 4 or name in ("latent_scale",) or \
+            (name in ("wkv", "ssm", "shift_tm", "shift_cm", "conv")
+             and leaf.ndim >= 3)
+        b_ax = 1 if stacked else 0
+        B = leaf.shape[b_ax]
+        slot_v = jnp.arange(B, dtype=jnp.float32) * 100
+        shape = [1] * leaf.ndim
+        shape[b_ax] = B
+        v = slot_v.reshape(shape)
+        if name in ("k", "v", "k_scale", "v_scale", "latent",
+                    "latent_scale"):
+            t_ax = b_ax + 1
+            T = leaf.shape[t_ax]
+            rshape = [1] * leaf.ndim
+            rshape[t_ax] = T
+            v = v + jnp.arange(T, dtype=jnp.float32).reshape(rshape)
+        return jnp.broadcast_to(v, leaf.shape).astype(leaf.dtype)
+    return jax.tree_util.tree_map_with_path(fill, caches)
+
+
+@pytest.mark.parametrize("p", [0, 3, 16])
+def test_copy_prefix_rows_and_scales_lockstep(p):
+    """int8 dense caches: rows < p of k/v AND k_scale/v_scale move from
+    src to dst together; rows >= p and other slots are untouched."""
+    cfg = CFG.replace(kv_cache_dtype="int8")
+    caches = _filled(init_cache(cfg, B=3, T=8))
+    out = copy_prefix(caches, dst=2, src=0, p=p)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        got = np.asarray(out["seg0"][name], np.float32)
+        ref = np.asarray(caches["seg0"][name], np.float32)
+        k = min(p, 8)
+        np.testing.assert_array_equal(got[:, 2, :k], ref[:, 0, :k])
+        np.testing.assert_array_equal(got[:, 2, k:], ref[:, 2, k:])
+        np.testing.assert_array_equal(got[:, :2], ref[:, :2])  # others
+
+
+def test_copy_prefix_ring_collapses_to_window():
+    """A W=4 ring leaf copies min(p, W) rows — the last W prefix
+    positions, whose ring indices are rows 0..W-1 (donor never wrapped
+    past the prefix under the validity rule)."""
+    cfg = CFG.replace(window_size=4)
+    caches = _filled(init_cache(cfg, B=2, T=16))
+    assert caches["seg0"]["k"].shape[2] == 4          # ring capacity
+    out = copy_prefix(caches, dst=1, src=0, p=6)      # p > W: all W rows
+    got = np.asarray(out["seg0"]["k"], np.float32)
+    ref = np.asarray(caches["seg0"]["k"], np.float32)
+    np.testing.assert_array_equal(got[:, 1], ref[:, 0])
+    out2 = copy_prefix(caches, dst=1, src=0, p=2)     # p < W: rows 0..1
+    got2 = np.asarray(out2["seg0"]["k"], np.float32)
+    np.testing.assert_array_equal(got2[:, 1, :2], ref[:, 0, :2])
+    np.testing.assert_array_equal(got2[:, 1, 2:], ref[:, 1, 2:])
+
+
+def test_copy_prefix_recurrent_only_with_flag():
+    """Hybrid (shared_attn + mamba) int8: the unstacked shared-block
+    k/v + scales copy rows < p; mamba ssm/conv state copies ONLY under
+    copy_recurrent=True (the engine sets it for recurrent models, whose
+    donors are boundary-gated)."""
+    cfg = HYBRID_CFG.replace(kv_cache_dtype="int8")
+    caches = _filled(init_cache(cfg, B=2, T=8))
+    shared = [k for k, c in caches.items() if "k" in c and
+              c["k"].ndim == 4]
+    assert shared, "hybrid plan should carry an unstacked shared block"
+    out = copy_prefix(caches, dst=1, src=0, p=3)
+    for seg, c in caches.items():
+        if "k" in c and c["k"].ndim == 4:             # shared block
+            got = np.asarray(out[seg]["k_scale"], np.float32)
+            ref = np.asarray(c["k_scale"], np.float32)
+            np.testing.assert_array_equal(got[1, :3], ref[0, :3])
+            np.testing.assert_array_equal(got[1, 3:], ref[1, 3:])
+        if "ssm" in c:                                # no flag: untouched
+            np.testing.assert_array_equal(np.asarray(out[seg]["ssm"]),
+                                          np.asarray(c["ssm"]))
+    out_r = copy_prefix(caches, dst=1, src=0, p=3, copy_recurrent=True)
+    for seg, c in caches.items():
+        for name in ("ssm", "conv"):
+            if name in c:
+                got = np.asarray(out_r[seg][name])
+                ref = np.asarray(c[name])
+                np.testing.assert_array_equal(got[:, 1], ref[:, 0])
+
+
+def test_copy_prefix_self_copy_is_identity():
+    cfg = CFG.replace(kv_cache_dtype="int8")
+    caches = _filled(init_cache(cfg, B=2, T=8))
+    out = copy_prefix(caches, dst=1, src=1, p=5)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(caches)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex / scheduler units: trie matching, refcount, LRU eviction
+# ---------------------------------------------------------------------------
+
+def _entry(rid, slot, tokens, depth):
+    e = PrefixEntry(rid, slot, tokens)
+    e._depth = depth
+    e.retained = True
+    return e
+
+
+def test_prefix_index_longest_usable_match():
+    idx = PrefixIndex()
+    idx.insert(_entry(0, 0, [1, 2, 3, 4, 5], depth=5))
+    idx.insert(_entry(1, 1, [1, 2, 9], depth=3))
+    usable = lambda lcp, e: min(lcp, e.depth)
+    e, p = idx.match([1, 2, 3, 4, 5, 6], usable)
+    assert (e.rid, p) == (0, 5)
+    e, p = idx.match([1, 2, 9, 9], usable)
+    assert (e.rid, p) == (1, 3)
+    e, p = idx.match([7, 8], usable)
+    assert e is None and p == 0
+    # a shallow-LCP donor with depth can beat a deep-LCP shallow donor
+    idx2 = PrefixIndex()
+    idx2.insert(_entry(0, 0, [1, 2, 3, 4, 5, 6, 7, 8], depth=2))
+    idx2.insert(_entry(1, 1, [1, 2, 3, 9], depth=4))
+    e, p = idx2.match([1, 2, 3, 4, 5, 6, 7, 8], usable)
+    assert (e.rid, p) == (1, 3)
+    # validity hook can veto the deepest candidate entirely
+    veto = lambda lcp, e: 0 if e.rid == 0 else min(lcp, e.depth)
+    e, p = idx.match([1, 2, 3, 4, 5], veto)
+    assert (e.rid, p) == (1, 2)
+
+
+def test_prefix_index_remove_prunes():
+    idx = PrefixIndex()
+    idx.insert(_entry(0, 0, [1, 2, 3], depth=3))
+    idx.insert(_entry(1, 1, [1, 2, 4], depth=3))
+    idx.remove(0)
+    usable = lambda lcp, e: min(lcp, e.depth)
+    e, p = idx.match([1, 2, 3], usable)
+    assert (e.rid, p) == (1, 2)                   # only the sibling left
+    idx.remove(1)
+    assert len(idx) == 0 and not idx._root.children
+
+
+def test_scheduler_retains_and_evicts_lru():
+    """Retired slots are retained (not freed); admission evicts the LRU
+    retained entry; pinned donors (refcount) are skipped."""
+    s = SlotScheduler(2, 64, prefix_cache=True)
+    ra = s.submit(list(range(10, 20)), SamplingParams(max_new=1))
+    rb = s.submit(list(range(30, 40)), SamplingParams(max_new=1))
+    sta, stb = s.admit()
+    for st in (sta, stb):
+        st.pos = len(st.request.prompt)
+        st.note_token(1)
+        assert st.should_retire()
+    s.retire(sta.slot)
+    s.retire(stb.slot)
+    assert s.n_free == 0 and s.n_retained == 2
+    # unrelated request evicts the LRU retained entry (ra, retired first)
+    s.submit(list(range(50, 60)), SamplingParams(max_new=1))
+    (stc,) = s.admit()
+    assert stc.prefix_len == 0
+    assert s.n_retained == 1 and s.index.get(ra) is None
+    assert s.index.get(rb) is not None
+    del rb
+
+
+def test_scheduler_matched_donor_survives_concurrent_eviction():
+    """Two requests admitted in one admit(): the first's matched donor
+    is refcount-pinned, so the second's slot acquisition must evict a
+    DIFFERENT retained entry."""
+    s = SlotScheduler(2, 64, prefix_cache=True)
+    shared = list(range(10, 20))
+    ra = s.submit(shared + [1], SamplingParams(max_new=1))
+    rb = s.submit(list(range(30, 40)), SamplingParams(max_new=1))
+    for st in s.admit():
+        st.pos = len(st.request.prompt)
+        st.note_token(1)
+        s.retire(st.slot)
+    # rc matches ra's retained entry; rd is unrelated — in one admit()
+    rc = s.submit(shared + [2], SamplingParams(max_new=1))
+    rd = s.submit(list(range(70, 80)), SamplingParams(max_new=1))
+    admitted = s.admit()
+    # rc got rb's slot (the only UNPINNED retained entry was evicted);
+    # rd must WAIT: the only remaining retained entry is rc's pinned
+    # donor, which cannot be reclaimed out from under the pending copy
+    assert [st.request.rid for st in admitted] == [rc]
+    (stc,) = admitted
+    assert stc.prefix_len == len(shared)
+    assert stc.prefix_src != stc.slot        # donor NOT evicted for rc
+    assert s.index.get(rb) is None and s.index.get(ra) is not None
+    assert s.n_queued == 1
+    # the engine releases the pin once its copy lands; the NEXT admit
+    # can then evict ra's entry and seat rd
+    s.release_donor(stc)
+    assert s.index.get(ra).refcount == 0
+    (std,) = s.admit()
+    assert std.request.rid == rd and std.prefix_len == 0
+    assert s.index.get(ra) is None           # LRU-evicted for rd's slot
+    del std
+
+
+def test_prefix_hits_under_mesh_unchanged():
+    """Prefix hits with mesh-placed caches (prefix_copy_shardings pins
+    the copy to the cache layout) produce the same tokens as no-mesh."""
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    params = init_params(KEY, CFG)
+    prompts = _shared_prompts(CFG, n=2, sys_len=8, seed=7)
+    sp = SamplingParams(max_new=3)
+
+    def run(mesh_arg):
+        eng = Engine(CFG, params, max_len=32, n_slots=2, mesh=mesh_arg)
+        eng.submit(prompts[0][:8], sampling=SamplingParams(max_new=1))
+        eng.run()
+        rids = [eng.submit(p, sampling=sp) for p in prompts]
+        out = eng.run()
+        assert eng.stats["prefix_hits"] >= 2, eng.stats
+        return [list(out[r].tokens) for r in rids]
+
+    assert run(None) == run(mesh)

@@ -362,15 +362,29 @@ def test_generate_caps_n_new_at_max_new():
 
 
 # ---------------------------------------------------------------------------
-# kv_bucket regression (satellite: lo <= 0 used to loop forever)
+# kv_bucket regressions (satellites: lo <= 0 used to loop forever, and
+# needed > cap used to clamp silently — a truncated cache read)
 # ---------------------------------------------------------------------------
 
 def test_kv_bucket_validates_floor():
     assert kv_bucket(5, 1, 64) == 8
     assert kv_bucket(5, 32, 64) == 32
-    assert kv_bucket(100, 32, 64) == 64
+    # overshooting the cap by doubling still clamps: 39 -> 64 -> cap 48
+    assert kv_bucket(39, 32, 48) == 48
     for lo in (0, -4):
         with pytest.raises(ValueError, match=">= 1"):
             kv_bucket(5, lo, 64)
     with pytest.raises(ValueError, match="kv_bucket_min"):
         Engine(CFG, {}, max_len=16, kv_bucket_min=0)
+
+
+def test_kv_bucket_rejects_needed_beyond_cap():
+    """needed > cap silently returned cap, so a request needing more KV
+    than the capacity read a TRUNCATED cache slice with no error — now a
+    ValueError (requests that can't fit are rejected at admission by
+    SlotScheduler.submit's prompt + max_new <= max_len check)."""
+    with pytest.raises(ValueError, match="exceeds the cache capacity"):
+        kv_bucket(100, 32, 64)
+    with pytest.raises(ValueError, match="exceeds the cache capacity"):
+        kv_bucket(65, 1, 64)
+    assert kv_bucket(64, 1, 64) == 64      # == cap is exactly full, fine

@@ -249,6 +249,44 @@ def test_continuous_temperature_sampling_in_vocab():
     assert all(0 <= t < CFG.vocab_size for t in out[rid].tokens)
 
 
+def test_collect_edge_semantics():
+    """collect() edge cases pinned (satellite): unknown rid -> None,
+    collect while the request is still ACTIVE -> None (and the request
+    keeps running to completion), double-collect -> None, bulk collect
+    before any submit -> {} — none of them crash or drop state."""
+    params = init_params(KEY, CFG)
+    prompt = np.asarray(jax.random.randint(KEY, (6,), 0, CFG.vocab_size))
+    eng = Engine(CFG, params, max_len=32, n_slots=2)
+    assert eng.collect() == {}                # nothing ever submitted
+    assert eng.collect(123) is None           # unknown rid, no scheduler
+    rid = eng.submit(prompt, sampling=SamplingParams(max_new=3))
+    assert eng.collect(rid) is None           # queued, not finished
+    eng.step()
+    assert eng.collect(rid) is None           # active mid-flight
+    assert eng.collect(999) is None           # unknown rid, live engine
+    out = eng.run()
+    assert list(out) == [rid]                 # mid-flight probes lost nothing
+    assert len(out[rid].tokens) == 3
+    assert eng.collect(rid) is None           # double-collect after bulk
+    assert eng.collect() == {}
+
+
+def test_ttft_and_latency_on_one_clock():
+    """Clock-unification satellite: submit/first-token/finish all stamp
+    serve_clock (one monotonic base), so 0 <= ttft <= total latency even
+    with host delays between submission and stepping."""
+    import time as _time
+    params = init_params(KEY, CFG)
+    prompt = np.asarray(jax.random.randint(KEY, (8,), 0, CFG.vocab_size))
+    eng = Engine(CFG, params, max_len=32, n_slots=1, prefill_chunk=2)
+    rid = eng.submit(prompt, sampling=SamplingParams(max_new=4))
+    _time.sleep(0.02)                         # queue dwell counts into ttft
+    comp = eng.run()[rid]
+    assert comp.submitted_at <= comp.first_token_at <= comp.finished_at
+    assert 0.0 <= comp.ttft_s <= comp.latency_s
+    assert comp.ttft_s >= 0.02                # the dwell is visible
+
+
 def test_slot_caches_shard_under_mesh():
     """cache_shardings places slot caches (and sampling_param_shardings
     the per-slot sampling state); engine output is unchanged — including

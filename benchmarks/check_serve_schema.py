@@ -25,7 +25,7 @@ TOP_KEYS = (
     "static", "continuous", "continuous_int8",
     "throughput_speedup", "int8_tokens_per_s_delta",
     "kv_bytes_per_token_by_dtype", "host_transfer_bytes_per_step",
-    "shared_prefix",
+    "shared_prefix", "speculative",
 )
 RUN_KEYS = ("name", "tokens_per_s", "ms_per_token_p50",
             "ms_per_token_p99", "makespan_s")
@@ -33,13 +33,22 @@ CONTINUOUS_KEYS = RUN_KEYS + ("prefill_s", "decode_s", "prefill_tokens",
                               "decode_tokens", "fused_steps",
                               "prefix_hits", "hit_rate",
                               "prefill_tokens_saved",
-                              "prefill_tokens_saved_frac")
+                              "prefill_tokens_saved_frac",
+                              "spec_rounds", "spec_drafted",
+                              "spec_accepted", "spec_k_sum")
 KV_DTYPES = ("auto", "bf16", "int8", "fp8")
 HOST_TRANSFER_KEYS = ("v1_logits_rows", "v2_sampled_ids",
                       "v2_with_logprobs")
 SHARED_PREFIX_KEYS = ("sys_len", "no_prefix_cache", "prefix_cache",
                       "hit_rate", "prefill_tokens_saved",
                       "prefill_tokens_saved_frac", "prefix_speedup")
+SPECULATIVE_KEYS = ("config", "n_slots", "draft_layers", "non_spec",
+                    "spec", "spec_rounds", "accept_rate", "mean_k",
+                    "tokens_per_s", "spec_speedup", "bytes_model")
+BYTES_MODEL_KEYS = ("draft_step_bytes", "verify_chunk_bytes",
+                    "round_bytes", "tokens_per_round",
+                    "spec_bytes_per_token", "baseline_bytes_per_token",
+                    "bytes_speedup")
 
 
 def check(path: str) -> None:
@@ -84,6 +93,34 @@ def check(path: str) -> None:
         f"{path}: expected >=80% prefill tokens saved on the shared " \
         f"trace, got {sp['prefill_tokens_saved_frac']:.2f}"
     assert sp["prefix_speedup"] > 0, f"{path}: bad prefix_speedup"
+    # self-speculative decoding on the single-stream run: the round
+    # counters are deterministic enough to hard-gate (rounds ran, every
+    # drafted token was counted, the rule's accept rate is a
+    # probability); the measured tokens/s speedup is timing-dependent
+    # and only gated > 0
+    sv = payload["speculative"]
+    missing = [k for k in SPECULATIVE_KEYS if k not in sv]
+    assert not missing, f"{path}: speculative missing keys {missing}"
+    assert sv["n_slots"] == 1, \
+        f"{path}: the speculative comparison must be single-stream " \
+        f"(latency-bound) — multi-slot Poisson traces are arrival-bound"
+    for run in ("non_spec", "spec"):
+        missing = [k for k in CONTINUOUS_KEYS if k not in sv[run]]
+        assert not missing, \
+            f"{path}: speculative[{run}] missing keys {missing}"
+    assert sv["non_spec"]["spec_rounds"] == 0, \
+        f"{path}: the speculative=False run cannot record spec rounds"
+    assert sv["spec_rounds"] > 0, \
+        f"{path}: the speculative run never entered a draft/verify round"
+    assert sv["spec"]["spec_drafted"] >= sv["spec"]["spec_accepted"] >= 0
+    assert 0.0 <= sv["accept_rate"] <= 1.0, \
+        f"{path}: accept_rate {sv['accept_rate']} out of [0, 1]"
+    assert sv["mean_k"] >= 1.0, f"{path}: mean_k {sv['mean_k']} < 1"
+    assert sv["tokens_per_s"] > 0 and sv["spec_speedup"] > 0, \
+        f"{path}: bad speculative throughput fields"
+    missing = [k for k in BYTES_MODEL_KEYS if k not in sv["bytes_model"]]
+    assert not missing, f"{path}: bytes_model missing keys {missing}"
+    assert sv["bytes_model"]["bytes_speedup"] > 0
     print(f"ok: {path}")
 
 

@@ -91,6 +91,26 @@ def altup_layer(layer_fn: Callable[[jax.Array], jax.Array],
     return correct(x_hat, x_tilde, sel, g)
 
 
+def compose_predictors(p_stack: jax.Array, start: int = 0) -> jax.Array:
+    """Compose a run of per-layer predictors into ONE (K, K) mixer.
+
+    p_stack: (n, K, K) stacked predictors of a segment. Skipping layers
+    start..n-1 of the segment and applying only their predict steps is
+
+        x <- P_{n-1} @ (... @ (P_{start} @ x))  ==  (P_{n-1} ... P_{start}) @ x
+
+    because predict() is linear in the stream: the whole skipped tail
+    collapses to a single K x K matmul — the draft path's "predict-only
+    exit" costs K^2 scalars per token regardless of how many layers it
+    skips. Statically unrolled (n is a static segment size); start == n
+    returns the identity."""
+    n, K = p_stack.shape[0], p_stack.shape[1]
+    comp = jnp.eye(K, dtype=p_stack.dtype)
+    for i in range(int(start), n):
+        comp = p_stack[i] @ comp
+    return comp
+
+
 # --------------------------------------------------------------------------
 # Embedding widening / recycling (paper Sec. 3 + Sec. 4.1)
 # --------------------------------------------------------------------------

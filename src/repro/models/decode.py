@@ -233,19 +233,22 @@ def _q_pos(pos):
     return pos[None] if pos.ndim == 0 else pos[:, None]   # (1,) | (B, 1)
 
 
-def _ring_k_pos(pos, W: int):
+def _ring_k_pos(pos, W: int, far_offset: int = 1):
     """Absolute key positions held by a W-slot ring cache at depth `pos`.
 
     Ring index i holds the latest absolute position p <= pos with
     p % W == i, i.e. pos - ((pos - i) mod W). Never-written slots map to
-    negative positions; they are pushed to pos + 1 so the causal mask
-    kills them (their content is stale/zero)."""
+    negative positions; they are pushed to pos + far_offset so the causal
+    mask kills them (their content is stale/zero). far_offset must exceed
+    the largest query offset relative to `pos` — 1 for the S=1 decode
+    tick; the chunked-verify path passes S + 1 so a never-written row can
+    never collide with a chunk query position."""
     p = _q_pos(pos)
     if p.ndim == 1:                                       # scalar pos
         p = p[None]                                       # (1, 1)
     idx = jnp.arange(W)[None, :]                          # (1, W)
     k_abs = p - ((p - idx) % W)                           # (B|1, W)
-    return jnp.where(k_abs < 0, p + 1, k_abs)
+    return jnp.where(k_abs < 0, p + far_offset, k_abs)
 
 
 def _bucketed(T: int, kv_len) -> int:
@@ -348,6 +351,19 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
                                  kv_len=kv_len)
     q_pos, widx, k_pos, Tb = (pinfo["q_pos"], pinfo["widx"], pinfo["k_pos"],
                               pinfo["Tb"])
+    S = x.shape[1]
+    # A multi-token chunk on a RING cache cannot use write-then-read: the
+    # chunk's writes at rows (pos+j) % W destroy positions pos+j-W that
+    # EARLIER chunk queries still need. The speculative fused-verify path
+    # (serve/speculative.py) reads BEFORE writing instead: capture the
+    # pre-chunk window here, attend over [pre-chunk rows, fresh chunk
+    # keys] below. S=1 decode ticks keep the write-then-read fast path.
+    chunk_ring = ring and S > 1
+    if chunk_ring:
+        pre_k = cache_k[:, :Tb]
+        pre_v = cache_v[:, :Tb]
+        pre_scales = ((cache_ks[:, :Tb], cache_vs[:, :Tb])
+                      if spec.quantized else None)
     h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
     # project current token k, v and write to cache
     src = h
@@ -365,20 +381,49 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
         cache_vs = _update_at(cache_vs, vs_new, widx)
     cache_k = _update_at(cache_k, k_new, widx)
     cache_v = _update_at(cache_v, v_new, widx)
-    # read slice: O(bucket) bytes, not O(T) — rows past the kv-len bucket
-    # are allocated-but-unwritten (masked anyway) and never touched
-    kr = cache_k[:, :Tb] if Tb < T else cache_k
-    vr = cache_v[:, :Tb] if Tb < T else cache_v
-    kv_scales = None
-    if spec.quantized:
-        kv_scales = (cache_ks[:, :Tb] if Tb < T else cache_ks,
-                     cache_vs[:, :Tb] if Tb < T else cache_vs)
-    lengths = jnp.broadcast_to(pinfo["lengths"], (x.shape[0],)) \
-        if use_ragged else None
-    a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
-                             q_pos=q_pos, k_pos=k_pos,
-                             kv=(kr, vr), ragged_lengths=lengths,
-                             kv_scales=kv_scales)
+    if chunk_ring:
+        # pre-chunk key positions at depth pos (last written pos-1);
+        # never-written rows go past every chunk query (pos + S). Fresh
+        # chunk keys sit at their own q_pos; padded chunk tokens (widx
+        # remapped to T by decode_positions) are pushed out of range too.
+        # The quantized path attends the DEQUANTIZED codes of the fresh
+        # keys — the same quantize->dequantize round-trip every later
+        # read sees, so chunked verify is bit-identical to S=1 decode.
+        fresh_k, fresh_v = k_new, v_new
+        if spec.quantized:
+            pre_k = quant.dequantize(pre_k, pre_scales[0], x.dtype)
+            pre_v = quant.dequantize(pre_v, pre_scales[1], x.dtype)
+            fresh_k = quant.dequantize(k_new, ks_new, x.dtype)
+            fresh_v = quant.dequantize(v_new, vs_new, x.dtype)
+        pre_pos = _ring_k_pos(jnp.asarray(pos) - 1, T,
+                              far_offset=S + 1)[:, :Tb]
+        chunk_pos = jnp.where(widx < T, q_pos, q_pos[:, -1:] + 1)
+        kcat = jnp.concatenate(
+            [pre_k, jnp.broadcast_to(fresh_k, (pre_k.shape[0],)
+                                     + fresh_k.shape[1:])], axis=1)
+        vcat = jnp.concatenate(
+            [pre_v, jnp.broadcast_to(fresh_v, (pre_v.shape[0],)
+                                     + fresh_v.shape[1:])], axis=1)
+        kp = jnp.concatenate(
+            [jnp.broadcast_to(pre_pos, (chunk_pos.shape[0], Tb)),
+             chunk_pos], axis=1)
+        a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
+                                 q_pos=q_pos, k_pos=kp, kv=(kcat, vcat))
+    else:
+        # read slice: O(bucket) bytes, not O(T) — rows past the kv-len
+        # bucket are allocated-but-unwritten (masked anyway), never read
+        kr = cache_k[:, :Tb] if Tb < T else cache_k
+        vr = cache_v[:, :Tb] if Tb < T else cache_v
+        kv_scales = None
+        if spec.quantized:
+            kv_scales = (cache_ks[:, :Tb] if Tb < T else cache_ks,
+                         cache_vs[:, :Tb] if Tb < T else cache_vs)
+        lengths = jnp.broadcast_to(pinfo["lengths"], (x.shape[0],)) \
+            if use_ragged else None
+        a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
+                                 q_pos=q_pos, k_pos=k_pos,
+                                 kv=(kr, vr), ragged_lengths=lengths,
+                                 kv_scales=kv_scales)
     x = x + a
     if cross is not None:
         cp, ck, cv = cross
@@ -598,6 +643,84 @@ def decode_sample_step(params, caches, seen, tokens, pos, n_valid, sparams,
     return ids, lps, caches, seen
 
 
+def _tree_head(tree, m: int):
+    """First m stacked layers of a segment's param/cache pytree."""
+    return jax.tree_util.tree_map(lambda l: l[:m], tree)
+
+
+def _tree_merge(old, new, m: int):
+    """Merge updated head layers back over the untouched tail."""
+    return jax.tree_util.tree_map(
+        lambda o, n: jnp.concatenate([n, o[m:]], axis=0), old, new)
+
+
+def draft_step(params, cfg: ModelConfig, caches, tokens, pos, *,
+               draft_layers: int, n_valid=None, kv_len=None, mesh=None):
+    """Predict-only / early-exit DRAFT forward for self-speculative
+    decoding (serve/speculative.py).
+
+    Runs the first `draft_layers` layers exactly as decode_step would —
+    including their cache writes, so the draft's K/V land in the slot
+    caches at their true positions (the draft-KV scratch IS the main
+    cache: the verify chunk rewrites those rows with bit-identical
+    values, since layers below the exit compute the same activations) —
+    then collapses every remaining layer to its AltUp PREDICT step. The
+    skipped tail of each segment is one composed K x K mixer
+    (core/altup.compose_predictors): predict is linear in the widened
+    stream, so L-D skipped layers cost K^2 scalars per token, zero
+    attention/FFN compute and zero cache traffic. With AltUp disabled
+    the tail is the identity (a plain early exit).
+
+    Same signature/contract as decode_step minus encdec support; returns
+    (logits (B, S, V), new caches).
+    """
+    import dataclasses
+    from repro.kernels import resolve_kernel_flag
+    assert cfg.family != "encdec", "draft_step serves decoder-only models"
+    D = int(draft_layers)
+    assert 1 <= D <= cfg.n_layers, f"draft_layers={D} out of range"
+    use_ragged = resolve_kernel_flag(cfg.ragged_decode_attn)
+    use_fused = cfg.altup.enabled and \
+        resolve_kernel_flag(cfg.fused_decode_altup)
+    K = cfg.altup.K
+    x = embed_tokens(params, cfg, tokens)
+    x = _shard(x, mesh, P(batch_axes(mesh), *([None] * (x.ndim - 1))))
+    new_caches = dict(caches)
+    for si, seg in enumerate(layer_plan(cfg)):
+        p_seg = (params["shared_blk"] if seg.kind == "shared_attn"
+                 else params[f"seg{si}"])
+        cache = caches[f"seg{si}"]
+        m = min(max(D - seg.layer_offset, 0), seg.n)   # full-compute layers
+        if m == seg.n:
+            x, nc = decode_segment(p_seg, cache, seg, cfg, x, pos,
+                                   mesh=mesh, n_valid=n_valid,
+                                   kv_len=kv_len, use_ragged=use_ragged,
+                                   use_fused=use_fused)
+            new_caches[f"seg{si}"] = nc
+            continue
+        if m > 0:
+            # partial segment: run the head layers through the normal
+            # scanned body on sliced param/cache stacks, then merge the
+            # updated cache head back over the untouched tail layers
+            head = dataclasses.replace(seg, n=m)
+            x, nc = decode_segment(_tree_head(p_seg, m), _tree_head(cache, m),
+                                   head, cfg, x, pos, mesh=mesh,
+                                   n_valid=n_valid, kv_len=kv_len,
+                                   use_ragged=use_ragged,
+                                   use_fused=use_fused)
+            new_caches[f"seg{si}"] = _tree_merge(cache, nc, m)
+        if cfg.altup.enabled:
+            # predict-only tail: layers [m, n) collapse to ONE composed
+            # K x K mixer (shared_attn blocks carry an unstacked (K, K))
+            if seg.kind == "shared_attn":
+                comp = p_seg["altup_p"]
+            else:
+                comp = alt.compose_predictors(p_seg["altup_p"], start=m)
+            x = alt.predict(x, comp)
+    logits = unembed(params, cfg, x, mesh=mesh)
+    return logits, new_caches
+
+
 # Recurrent cache leaves carry history that attention masking cannot
 # neutralize — they must be zeroed when a slot is recycled. Attention
 # k/v/latent leaves self-clean: a recycled slot rewrites positions
@@ -691,6 +814,118 @@ def reset_slot(caches, slot):
         return leaf
 
     return jax.tree_util.tree_map_with_path(reset, caches)
+
+
+# --------------------------------------------------------------------------
+# speculative-decoding cache rollback (serve/speculative.py)
+# --------------------------------------------------------------------------
+# Linear (full-attention) k/v and MLA latent caches need NO restore on a
+# rejected speculative suffix: rows past the committed position are masked
+# by per-slot positions and rewritten before they become visible, and the
+# quantized scale leaves share the write index so they stay in lockstep.
+# RING caches are the exception — a chunk write at row (pos+j) % W
+# DESTROYS position pos+j-W, which surviving queries still need after a
+# rewind — so the engine snapshots the S rows a speculative round will
+# touch before drafting and restores the rejected suffix afterwards.
+
+
+def _ring_segs(cfg: ModelConfig):
+    """(seg_name, stacked?) for every ring-cache segment of the plan."""
+    out = []
+    for si, seg in enumerate(layer_plan(cfg)):
+        if seg.kind in ("attn", "shared_attn") and seg.window > 0:
+            out.append((f"seg{si}", seg.kind == "attn"))
+    return out
+
+
+def _ring_rows(leaf, stacked: bool, pos, S: int):
+    """(B,) pos -> the (B, S) ring rows positions pos..pos+S-1 occupy."""
+    Tc = leaf.shape[2 if stacked else 1]
+    B = leaf.shape[1 if stacked else 0]
+    p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    return (p[:, None] + jnp.arange(S, dtype=jnp.int32)[None]) % Tc
+
+
+def snapshot_rows(cfg: ModelConfig, caches, pos, S: int):
+    """Capture the ring-cache rows (codes AND quantized scales, in
+    lockstep) that speculative positions pos..pos+S-1 will overwrite.
+    Returns {seg_name: {leaf: (n, B, S, ...) | (B, S, ...)}} — empty for
+    plans with no ring segment. S must not exceed the smallest ring
+    window (the engine caps the draft length so one round never wraps a
+    row onto itself)."""
+    snap = {}
+    for name, stacked in _ring_segs(cfg):
+        c = caches[name]
+        entry = {}
+        for leaf_name in ("k", "v", "k_scale", "v_scale"):
+            if leaf_name not in c:
+                continue
+            leaf = c[leaf_name]
+            rows = _ring_rows(leaf, stacked, pos, S)
+            B = rows.shape[0]
+            bidx = jnp.arange(B)[:, None]
+            entry[leaf_name] = (leaf[:, bidx, rows] if stacked
+                                else leaf[bidx, rows])
+        snap[name] = entry
+    return snap
+
+
+def restore_rows(cfg: ModelConfig, caches, snap, pos, start, S: int):
+    """Scatter snapshot rows back: slot b restores rows start_b..S-1
+    (start is scalar or (B,)). start=0 undoes a whole round's ring
+    writes (pre-verify: the draft's ring writes must not shadow the
+    window the verify chunk reads); start=n_committed_b is the
+    post-verify rollback that rewinds exactly the rejected suffix.
+    start >= S restores nothing for that slot."""
+    new_caches = dict(caches)
+    offs = jnp.arange(S, dtype=jnp.int32)[None]
+    for name, stacked in _ring_segs(cfg):
+        c = dict(caches[name])
+        for leaf_name, snap_leaf in snap[name].items():
+            leaf = c[leaf_name]
+            Tc = leaf.shape[2 if stacked else 1]
+            rows = _ring_rows(leaf, stacked, pos, S)
+            B = rows.shape[0]
+            st = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+            # rows before each slot's start are remapped out of range ->
+            # dropped by the scatter (same trick as padded-token writes)
+            rows = jnp.where(offs >= st[:, None], rows, Tc)
+            bidx = jnp.arange(B)[:, None]
+            if stacked:
+                c[leaf_name] = leaf.at[:, bidx, rows].set(
+                    snap_leaf, mode="drop")
+            else:
+                c[leaf_name] = leaf.at[bidx, rows].set(
+                    snap_leaf, mode="drop")
+        new_caches[name] = c
+    return new_caches
+
+
+def recurrent_checkpoint(caches):
+    """Snapshot every recurrent state leaf (rwkv/mamba) — the draft-
+    boundary checkpoint. Recurrent state advances token-by-token and
+    cannot be rewound mid-chunk, so the speculative engine mode falls
+    back to normal decode for recurrent plans (mirroring the chunk=1
+    prefill gate); these helpers are the boundary-checkpoint primitive
+    for a future per-token recurrent verify."""
+    snap = {}
+    for seg_name, c in caches.items():
+        if not isinstance(c, dict):
+            continue
+        entry = {k: v for k, v in c.items() if k in _RECURRENT_LEAVES}
+        if entry:
+            snap[seg_name] = entry
+    return snap
+
+
+def restore_recurrent(caches, snap):
+    """Roll every recurrent state leaf back to its checkpoint."""
+    new_caches = dict(caches)
+    for seg_name, entry in snap.items():
+        c = dict(caches[seg_name])
+        c.update(entry)
+        new_caches[seg_name] = c
+    return new_caches
 
 
 def prefill(params, cfg: ModelConfig, tokens, T: int, *, mesh=None,

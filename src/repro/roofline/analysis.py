@@ -223,6 +223,58 @@ def decode_kv_bytes(cfg, lengths, *, T: int, dtype_bytes: int = 2,
     return total
 
 
+def speculative_bytes(cfg, lengths, *, T: int, draft_layers: int,
+                      k: int, accept_rate: float,
+                      kv_dtype: Optional[str] = None,
+                      param_bytes: Optional[float] = None
+                      ) -> Dict[str, float]:
+    """Draft-vs-verify bytes model for self-speculative decoding.
+
+    Decode is bandwidth-bound on two reads (Pope et al. 2022): the
+    weights (once per step, amortized over the whole batch) and the
+    KV cache (per slot). Self-speculation changes BOTH terms:
+
+      draft step   : D/L of the layer stack -> D/L of the param bytes
+                     and D/L of the KV read (only the first D layers'
+                     caches are touched); the skipped tail is one K x K
+                     predictor matmul — byte-free at roofline scale.
+      verify step  : full params + full KV read, ONCE for k+1 tokens —
+                     the chunk amortizes the weight read over the whole
+                     window, which is where the speedup lives.
+
+    One round commits E[a]+1 = accept_rate*k + 1 tokens for
+    (k * draft + 1 * verify) bytes, vs (E[a]+1) plain decode steps at
+    full bytes each. Returns the per-round and per-committed-token
+    byte totals plus their ratio (`bytes_speedup` > 1 means the
+    speculative path moves fewer bytes per committed token).
+
+    lengths/T/kv_dtype mean the same as in decode_kv_bytes; param_bytes
+    (whole-model weight bytes) defaults to 0, i.e. the KV-only model —
+    pass a real figure for the full picture at small batch.
+    """
+    assert 1 <= draft_layers <= cfg.n_layers and k >= 1
+    assert 0.0 <= accept_rate <= 1.0
+    frac = draft_layers / cfg.n_layers
+    pw = float(param_bytes or 0.0)
+    kv_full = decode_kv_bytes(cfg, lengths, T=T, kv_dtype=kv_dtype)
+    step = kv_full + pw                       # one plain decode step
+    draft = frac * kv_full + frac * pw        # depth-D draft step
+    # verify reads each slot's cache once for the whole k+1 chunk (the
+    # chunk's own rows are a lower-order term at serving depths)
+    verify = kv_full + pw
+    committed = accept_rate * k + 1.0
+    round_bytes = k * draft + verify
+    return {
+        "draft_step_bytes": draft,
+        "verify_chunk_bytes": verify,
+        "round_bytes": round_bytes,
+        "tokens_per_round": committed,
+        "spec_bytes_per_token": round_bytes / committed,
+        "baseline_bytes_per_token": step,
+        "bytes_speedup": step * committed / round_bytes,
+    }
+
+
 def roofline_terms(flops: float, bytes_accessed: float,
                    collective_bytes: float, *, n_chips: int,
                    hw: HardwareConfig = TPU_V5E,

@@ -60,9 +60,8 @@ recurrent (rwkv/mamba) and ring-cache (sliding-window) models.
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -71,12 +70,16 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models.decode import (copy_prefix, decode_sample_step,
                                  decode_step, init_cache, kv_quant_spec,
-                                 prefill, reset_slot)
+                                 prefill, reset_slot, restore_rows,
+                                 snapshot_rows)
 from repro.serve.sampling import (Completion, SamplingParams,
                                   base_key_data, blank_slot_params,
                                   fill_slot_params, key_data_of,
                                   key_width, sample_rows, update_seen)
 from repro.serve.scheduler import SlotScheduler, serve_clock
+from repro.serve.speculative import (AdaptiveK, SpecConfig,
+                                     default_draft_layers,
+                                     draft_round, spec_verify_step)
 
 
 def kv_bucket(needed: int, lo: int, cap: int) -> int:
@@ -108,7 +111,8 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, max_len: int, *,
                  n_slots: int = 8, mesh=None, prefill_chunk: int = 8,
                  kv_buckets: bool = True, kv_bucket_min: int = 32,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 speculative: Union[bool, SpecConfig] = False):
         if kv_bucket_min < 1:
             raise ValueError(
                 f"kv_bucket_min must be >= 1, got {kv_bucket_min}")
@@ -119,6 +123,15 @@ class Engine:
         self._kv_bucket_min = kv_bucket_min
         self._prefix_cache = prefix_cache
         self._prefill_chunk = max(1, prefill_chunk)
+        # self-speculative decoding (serve/speculative.py): True enables
+        # it with defaults, a SpecConfig tunes it; recurrent plans fall
+        # back to normal decode at _ensure_slots (state cannot rewind)
+        if speculative is True:
+            speculative = SpecConfig()
+        elif speculative is False:
+            speculative = None
+        self._spec_cfg: Optional[SpecConfig] = speculative
+        self._spec = False          # resolved against the plan lazily
         self._step = jax.jit(partial(decode_step, cfg=cfg, mesh=mesh),
                              static_argnames=("kv_len",))
         # continuous-batching state (allocated lazily on first submit)
@@ -147,9 +160,13 @@ class Engine:
         # consumed in that fused step. prefix_hits / prefill_tokens_saved
         # count prefix-cache reuse: saved tokens are prompt tokens that
         # arrived by slot-to-slot copy instead of being prefilled.
+        # spec_* counters cover the speculative rounds: drafted/accepted
+        # feed the accept rate, spec_k_sum / spec_rounds the mean k
         self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
                       "prefill_s": 0.0, "decode_s": 0.0,
-                      "prefix_hits": 0, "prefill_tokens_saved": 0}
+                      "prefix_hits": 0, "prefill_tokens_saved": 0,
+                      "spec_rounds": 0, "spec_drafted": 0,
+                      "spec_accepted": 0, "spec_k_sum": 0}
 
     def reset_stats(self) -> None:
         """Zero the prefill/decode counters (benchmarks call this after
@@ -234,6 +251,37 @@ class Engine:
         # overwrite keys earlier chunk tokens still need
         self._chunk = (1 if self._has_recurrent or has_ring
                        else self._prefill_chunk)
+        # self-speculative decoding state. Recurrent plans fall back to
+        # normal decode (rwkv/mamba state advances token-by-token and
+        # cannot rewind a rejected suffix mid-chunk — the same reasoning
+        # that forces chunk=1 prefill above); ring plans cap the draft
+        # length so one round never wraps a ring row onto itself.
+        if self._spec_cfg is not None and not self._has_recurrent:
+            sc = self._spec_cfg
+            k_cap = min(self._ring_caps) - 1 if self._ring_caps else None
+            if k_cap is None or k_cap >= 1:
+                D = (sc.draft_layers if sc.draft_layers is not None
+                     else default_draft_layers(self.cfg))
+                self._spec_k = AdaptiveK(sc, k_cap)
+                self._spec_has_ring = bool(self._ring_caps)
+                self._spec_draft = jax.jit(
+                    partial(draft_round, cfg=self.cfg,
+                            draft_layers=D, mesh=self.mesh),
+                    static_argnames=("k", "kv_len", "any_sampled"),
+                    donate_argnums=(1,))
+                self._spec_verify = jax.jit(
+                    partial(spec_verify_step, cfg=self.cfg,
+                            mesh=self.mesh),
+                    static_argnames=("kv_len", "want_logprobs",
+                                     "any_sampled"),
+                    donate_argnums=(1, 2))
+                self._spec_snap = jax.jit(
+                    partial(snapshot_rows, self.cfg),
+                    static_argnames=("S",))
+                self._spec_restore = jax.jit(
+                    partial(restore_rows, self.cfg),
+                    static_argnames=("S",), donate_argnums=(0,))
+                self._spec = True
         caches = init_cache(self.cfg, self.n_slots, self.max_len)
         seen = jnp.zeros((self.n_slots, self.cfg.vocab_size), bool)
         self._sp_shardings = None
@@ -259,47 +307,21 @@ class Engine:
         self._caches = caches
         self._seen = seen
 
-    def submit(self, prompt, max_new: Optional[int] = None, *,
-               sampling: Optional[SamplingParams] = None,
-               temperature: Optional[float] = None,
-               eos_id: Optional[int] = None,
-               seed: Optional[int] = None) -> int:
+    def submit(self, prompt, *, sampling: SamplingParams) -> int:
         """Enqueue one request. prompt: 1-D sequence of token ids.
 
-        v2 API: submit(prompt, sampling=SamplingParams(...)). Returns a
-        request id for collect()/stream(). sampling.seed=None gives each
-        sampled request an independent stream (seeded by its rid).
-
-        DEPRECATED (one release, since the v2 API): the legacy
-        submit(prompt, max_new, temperature=..., eos_id=..., seed=...)
-        form still works and constructs the equivalent SamplingParams —
-        token-for-token identical to the v2 call — but emits a
-        DeprecationWarning."""
+        submit(prompt, sampling=SamplingParams(...)). Returns a request
+        id for collect()/stream(). sampling.seed=None gives each sampled
+        request an independent stream (seeded by its rid). The pre-v2
+        positional (max_new, temperature, eos_id, seed) shim is GONE —
+        its one-release deprecation window closed; passing those kwargs
+        now raises TypeError."""
         self._ensure_slots()
-        prompt = np.asarray(prompt).reshape(-1).tolist()
-        if sampling is None:
-            if max_new is None:
-                raise TypeError(
-                    "submit() requires sampling=SamplingParams(...) "
-                    "(or the deprecated max_new form)")
-            warnings.warn(
-                "submit(prompt, max_new, temperature=..., eos_id=..., "
-                "seed=...) is deprecated; pass sampling=SamplingParams("
-                "max_new=..., temperature=..., eos_id=..., seed=...). "
-                "The legacy kwargs will be removed next release.",
-                DeprecationWarning, stacklevel=2)
-            # pre-v2 treated temperature <= 0 as greedy; clamp so legacy
-            # negative-temperature calls keep working for the shim's life
-            sampling = SamplingParams(
-                max_new=int(max_new),
-                temperature=max(0.0, float(temperature or 0.0)),
-                eos_id=eos_id, seed=seed)
-        elif any(a is not None for a in (max_new, temperature, eos_id,
-                                         seed)):
+        if not isinstance(sampling, SamplingParams):
             raise TypeError(
-                "pass either sampling=SamplingParams(...) or the "
-                "deprecated (max_new, temperature, eos_id, seed) "
-                "kwargs — not both")
+                f"sampling must be a SamplingParams, got "
+                f"{type(sampling).__name__}")
+        prompt = np.asarray(prompt).reshape(-1).tolist()
         rid = self._sched.submit(prompt, sampling)
         s = sampling.seed if sampling.seed is not None else rid
         self._base_keys[rid] = base_key_data(s)
@@ -354,6 +376,15 @@ class Engine:
         self._events = []
         if not active:
             return 0
+        # speculative rounds only when EVERY active slot is decoding: the
+        # draft runs a truncated layer stack, so a prefilling slot (which
+        # must populate ALL layers' caches) pins the step to the normal
+        # fused path. A degenerate round (every slot at its last token)
+        # also falls through.
+        if self._spec and not any(st.in_prefill for st in active.values()):
+            n = self._spec_round(active)
+            if n is not None:
+                return n
         B = self.n_slots
         # pure-decode steps stay (B, 1); chunk width only when a prefill
         # slot can use it (each width is one jit specialization)
@@ -423,11 +454,129 @@ class Engine:
                 self._base_keys.pop(st.request.rid, None)
         return len(active)
 
+    def _spec_round(self, active) -> Optional[int]:
+        """One speculative draft/verify/rollback round (the step() body
+        when speculative mode is on and every active slot is decoding).
+        Returns the active-slot count, or None when the round would be
+        degenerate (every slot's per-slot draft budget is 0) — the
+        caller then falls through to the normal fused step."""
+        B = self.n_slots
+        # per-slot draft budget: the controller's k, clamped so the round
+        # cannot overrun max_new (a round commits <= k_b + 1 tokens) or
+        # the slot's cache capacity
+        caps: Dict[int, int] = {}
+        for slot, st in active.items():
+            rem = st.request.sampling.max_new - len(st.generated)
+            caps[slot] = max(0, min(self._spec_k.k, rem - 1,
+                                    self.max_len - 1 - st.pos))
+        k = max(caps.values())
+        if k < 1:
+            return None
+        S = k + 1
+        tokens = np.zeros((B, S), np.int32)
+        pos = np.zeros((B,), np.int32)
+        nval = np.zeros((B,), np.int32)
+        caps_arr = np.zeros((B,), np.int32)
+        sparams = blank_slot_params(B)
+        want_lp = any_sampled = False
+        needed = 1
+        for slot, st in active.items():
+            tokens[slot, 0] = st.next_token()
+            pos[slot] = st.pos
+            nval[slot] = caps[slot] + 1
+            caps_arr[slot] = caps[slot]
+            sp = st.request.sampling
+            fill_slot_params(sparams, slot, sp,
+                             self._base_keys[st.request.rid],
+                             len(st.generated))
+            want_lp |= sp.logprobs
+            any_sampled |= not sp.greedy
+            needed = max(needed, st.pos + caps[slot] + 1)
+        kv_len = self._bucket(needed)
+        sp_dev = {name: jnp.asarray(v) for name, v in sparams.items()}
+        if self._sp_shardings is not None:
+            sp_dev = jax.device_put(sp_dev, self._sp_shardings)
+        pos_dev = jnp.asarray(pos)
+        t0 = serve_clock()
+        # 0. snapshot the ring rows this round will touch (codes+scales)
+        snap = None
+        if self._spec_has_ring:
+            snap = self._spec_snap(self._caches, pos_dev, S=S)
+        # 1. draft k tokens through the predict-only path — one fused
+        # launch for the whole loop (k is jit-static). The seen copy is
+        # throwaway (rejected drafts must never reach the persistent
+        # repetition-penalty table); self._seen itself is not donated
+        # here, so its buffer survives for the verify step.
+        tok_mat, q_mat, caches, _ = self._spec_draft(
+            self.params, self._caches, self._seen,
+            jnp.asarray(tokens[:, :1]), pos_dev, jnp.asarray(caps_arr),
+            sp_dev, k=k, kv_len=kv_len, any_sampled=any_sampled)
+        # 2. undo the draft's ring writes BEFORE verify: the chunk reads
+        # the pre-round window (read-before-write path in decode_attn)
+        if self._spec_has_ring:
+            caches = self._spec_restore(
+                caches, snap, pos_dev, jnp.zeros((B,), jnp.int32), S=S)
+        # 3. fused chunk verify + on-device acceptance
+        committed, n_comm, lps, caches, self._seen = self._spec_verify(
+            self.params, caches, self._seen, tok_mat, pos_dev,
+            jnp.asarray(nval), sp_dev, q_mat, kv_len=kv_len,
+            want_logprobs=want_lp, any_sampled=any_sampled)
+        comm_np = np.asarray(committed)
+        nc_np = np.asarray(n_comm)
+        lps_np = np.asarray(lps) if want_lp else None
+        now = serve_clock()
+        dt = now - t0
+        # 4. host commit: per-rid deltas strictly in generation order,
+        # finish reasons re-checked token-by-token so eos/stop can
+        # truncate a round's tail mid-commit
+        drafted_total = int(caps_arr.sum())
+        accepted_total = committed_total = 0
+        starts = np.full((B,), S, np.int32)
+        for slot, st in active.items():
+            m = int(nc_np[slot])
+            accepted_total += m - 1
+            done_at = m
+            for j in range(m):
+                tok = int(comm_np[slot, j])
+                st.advance(1)
+                lp = (float(lps_np[slot, j])
+                      if lps_np is not None
+                      and st.request.sampling.logprobs else None)
+                st.note_token(tok, lp, now=now)
+                self._events.append((st.request.rid, tok))
+                if st.should_retire():
+                    done_at = j + 1
+                    break
+            committed_total += done_at
+            starts[slot] = done_at
+            if st.finish_reason is not None:
+                self._sched.retire(st.slot)
+                self._base_keys.pop(st.request.rid, None)
+        # 5. ring rollback of every uncommitted row — device-rejected
+        # suffixes AND host-truncated ones (eos mid-round), so retained
+        # prefix donors keep a clean window
+        if self._spec_has_ring:
+            caches = self._spec_restore(caches, snap, pos_dev,
+                                        jnp.asarray(starts), S=S)
+        self._caches = caches
+        self._spec_k.update(accepted_total, drafted_total)
+        self.stats["steps"] += 1
+        self.stats["decode_tokens"] += committed_total
+        self.stats["decode_s"] += dt
+        self.stats["spec_rounds"] += 1
+        self.stats["spec_drafted"] += drafted_total
+        self.stats["spec_accepted"] += accepted_total
+        self.stats["spec_k_sum"] += k
+        return len(active)
+
     def stream(self) -> Iterator[Tuple[int, int]]:
         """Drive step() while work remains, yielding (rid, token) deltas
         as each fused step completes — tokens arrive per request the
-        step they are sampled, interleaved across the active slots.
-        Finished requests remain collectable via collect()."""
+        step they are sampled, interleaved across the active slots. When
+        a step lands SEVERAL tokens for one request (a speculative round
+        committing accepted drafts), its deltas are yielded strictly in
+        generation order. Finished requests remain collectable via
+        collect()."""
         self._ensure_slots()
         while self._sched.has_work:
             self.step()

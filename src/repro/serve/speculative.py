@@ -1,0 +1,352 @@
+"""Self-speculative decoding: AltUp predict-only drafts, fused chunk
+verify, cache rollback.
+
+The paper's predict-and-correct structure hides a free draft model: the
+AltUp predictor is a K x K mixer, so running the first D layers in full
+and collapsing the remaining L-D layers to their composed predict steps
+(models/decode.draft_step + core/altup.compose_predictors) yields a
+cheap forward pass that stays distribution-close to the corrected model
+— no second set of weights, no separate draft cache. One speculative
+ROUND per engine step when every active slot is decoding:
+
+  1. DRAFT   k sequential cheap steps sample tokens t_1..t_k from the
+             draft distribution q against the live slot caches (the
+             draft's K/V for layers < D land at their true positions —
+             the verify chunk rewrites them with identical values).
+  2. VERIFY  ONE chunked decode_step over [t_0, t_1..t_k] (S = k+1,
+             per-slot n_valid; padded-token suppression handles ragged
+             draft lengths) gives the target model's row for every
+             position in a single fused launch.
+  3. ACCEPT  greedy slots accept draft j while it equals the target's
+             penalty-adjusted argmax; sampled slots follow the standard
+             rejection rule u*q(t) < p(t) on IDENTICALLY-processed
+             (penalized -> temperature -> top-k/p/min-p -> softmax)
+             distributions, with the correction token drawn from the
+             normalized residual max(p - q, 0) — so committed marginals
+             match the non-speculative sampler exactly. Every round
+             commits a+1 tokens (a accepted drafts + one correction /
+             bonus token): never fewer than a normal step.
+  4. ROLLBACK positions rewind on the host (per-slot pos advances by the
+             committed count only). Linear/MLA cache rows past the
+             committed position are masked by per-slot positions and
+             rewritten before they become visible — codes and quantized
+             scale leaves in lockstep — so they need no restore. RING
+             caches are restored from a pre-round row snapshot
+             (models/decode.snapshot_rows/restore_rows): fully before
+             verify (draft ring writes must not shadow the window the
+             chunk reads) and for rows >= the committed count after.
+             Recurrent (rwkv/mamba) state cannot rewind mid-chunk, so
+             recurrent plans fall back to normal decode (the engine's
+             chunk=1 precedent); the boundary-checkpoint primitives
+             live in models/decode.recurrent_checkpoint.
+
+The draft length k adapts to the measured accept rate (AdaptiveK: EMA +
+hysteresis), clamped so one round never wraps a ring row onto itself
+(k + 1 <= min ring window) and never overruns a slot's max_new budget.
+
+Progressive repetition penalty: verify row j is penalized by
+seen ∪ {t_0..t_j} — the exact seen-table the non-speculative path
+carries when sampling position pos+j+1 — and only the fed-and-committed
+prefix t_0..t_a enters the persistent seen table; rejected drafts never
+pollute it (drafting uses a throwaway copy).
+
+Oracle (tests/test_speculative.py): greedy speculative decode is
+token-identical to the non-speculative continuous path across the
+dense/GQA/ring/MoE/MLA x fp32/int8/fp8 grid.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.decode import decode_step, draft_step
+from repro.serve.sampling import _filter_logits, update_seen
+
+# key-stream tags: the draft sampler and the verify accept/residual draws
+# fold these into the per-request base key so speculative randomness
+# never collides with the non-speculative sampler's fold_in(key, t)
+_DRAFT_TAG = 0x5BEC
+_VERIFY_TAG = 0x5FEC
+
+
+def default_draft_layers(cfg: ModelConfig) -> int:
+    """Half the stack (floored at 1): the draft runs layers [0, D) in
+    full and predict-only composes the rest."""
+    return max(1, cfg.n_layers // 2)
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Engine-level speculative-decoding knobs.
+
+    k_max bounds the adaptive draft length (further clamped by ring
+    windows and per-slot budgets); draft_layers=None means
+    default_draft_layers(cfg). The controller raises k when the EMA
+    accept fraction exceeds raise_at and lowers it below lower_at
+    (hysteresis keeps it stable between the two)."""
+    k_max: int = 4
+    k_init: int = 2
+    draft_layers: Optional[int] = None
+    ema: float = 0.5
+    raise_at: float = 0.8
+    lower_at: float = 0.4
+
+    def __post_init__(self):
+        if self.k_max < 1:
+            raise ValueError(f"k_max must be >= 1, got {self.k_max}")
+        if not 1 <= self.k_init <= self.k_max:
+            raise ValueError(f"k_init must be in [1, k_max], got "
+                             f"{self.k_init}")
+        if not 0.0 <= self.lower_at <= self.raise_at <= 1.0:
+            raise ValueError("need 0 <= lower_at <= raise_at <= 1")
+        if not 0.0 <= self.ema < 1.0:
+            raise ValueError(f"ema must be in [0, 1), got {self.ema}")
+
+
+class AdaptiveK:
+    """Accept-rate-driven draft-length controller.
+
+    update() folds each round's accept fraction (accepted / drafted)
+    into an EMA; k steps up when the smoothed rate clears `raise_at`,
+    down below `lower_at`, clamped to [1, k_max]. Host-side and O(1):
+    the engine consults .k once per speculative round."""
+
+    def __init__(self, cfg: SpecConfig, k_cap: Optional[int] = None):
+        self.cfg = cfg
+        self.k_max = min(cfg.k_max, k_cap) if k_cap else cfg.k_max
+        self.k = min(cfg.k_init, self.k_max)
+        self.accept_rate: Optional[float] = None
+
+    def update(self, accepted: int, drafted: int) -> None:
+        if drafted <= 0:
+            return
+        frac = accepted / drafted
+        self.accept_rate = (frac if self.accept_rate is None
+                            else self.cfg.ema * self.accept_rate
+                            + (1.0 - self.cfg.ema) * frac)
+        if self.accept_rate > self.cfg.raise_at and self.k < self.k_max:
+            self.k += 1
+        elif self.accept_rate < self.cfg.lower_at and self.k > 1:
+            self.k -= 1
+
+
+# ---------------------------------------------------------------------------
+# the identically-processed distribution both sides of the rule use
+# ---------------------------------------------------------------------------
+
+def _penalize(rows, rep_pen, row_seen):
+    """CTRL-style repetition penalty, same arithmetic as sample_rows."""
+    pen = jnp.where(rows > 0, rows / rep_pen[..., None],
+                    rows * rep_pen[..., None])
+    return jnp.where(row_seen, pen, rows)
+
+
+def processed_dist(rows, temperature, top_k, top_p, min_p, rep_pen,
+                   row_seen):
+    """Penalty -> temperature -> top-k/top-p/min-p -> softmax.
+
+    rows: (..., V) logits with (...)-shaped per-row params. This is THE
+    distribution of the rejection rule: the draft q and the target p are
+    both processed through this exact pipeline (serve/sampling's filter
+    semantics), which is what makes accepted-token marginals match the
+    non-speculative sampler."""
+    rows = rows.astype(jnp.float32)
+    rows = _penalize(rows, rep_pen, row_seen)
+    z = rows / jnp.where(temperature > 0, temperature, 1.0)[..., None]
+    V = z.shape[-1]
+    flat = _filter_logits(z.reshape(-1, V), top_k.reshape(-1),
+                          top_p.reshape(-1), min_p.reshape(-1))
+    return jax.nn.softmax(flat, axis=-1).reshape(z.shape)
+
+
+def _round_keys(sparams, tag: int, extra=0):
+    """Per-slot key for one speculative draw stream:
+    fold_in(fold_in(fold_in(base, tag), sample_idx), extra)."""
+    fold = jax.vmap(jax.random.fold_in)
+    k = jax.random.wrap_key_data(sparams["key"])
+    k = fold(k, jnp.full_like(sparams["sample_idx"], tag))
+    k = fold(k, sparams["sample_idx"])
+    return fold(k, jnp.broadcast_to(jnp.asarray(extra, jnp.int32),
+                                    sparams["sample_idx"].shape))
+
+
+# ---------------------------------------------------------------------------
+# draft: k cheap steps against the live slot caches
+# ---------------------------------------------------------------------------
+
+def draft_sample_step(params, caches, draft_seen, tokens, pos, n_valid,
+                      sparams, draft_idx, *, cfg: ModelConfig,
+                      draft_layers: int, kv_len=None, any_sampled=True,
+                      mesh=None):
+    """One fused draft step: predict-only forward + on-device sampling.
+
+    Mirrors decode_sample_step but (a) runs models/decode.draft_step,
+    (b) updates a THROWAWAY draft_seen copy (rejected drafts must never
+    reach the persistent repetition-penalty table), and (c) also returns
+    the full processed draft distribution q (B, V) — the verify step
+    needs q(t) for the rejection rule and the residual. draft_idx: which
+    draft of the round this is (folds into the key stream). Returns
+    (ids, q, new caches, new draft_seen)."""
+    logits, caches = draft_step(params, cfg, caches, tokens, pos,
+                                draft_layers=draft_layers, n_valid=n_valid,
+                                kv_len=kv_len, mesh=mesh)
+    B = tokens.shape[0]
+    rows = logits[jnp.arange(B), jnp.maximum(n_valid - 1, 0),
+                  :cfg.vocab_size].astype(jnp.float32)
+    draft_seen = update_seen(draft_seen, tokens, n_valid)
+    pen = _penalize(rows, sparams["rep_pen"], draft_seen)
+    ids = jnp.argmax(pen, axis=-1).astype(jnp.int32)
+    q = jnp.zeros_like(rows)
+    if any_sampled:
+        q = processed_dist(rows, sparams["temperature"], sparams["top_k"],
+                           sparams["top_p"], sparams["min_p"],
+                           sparams["rep_pen"], draft_seen)
+        keys = _round_keys(sparams, _DRAFT_TAG, draft_idx)
+        sampled = jax.vmap(jax.random.categorical)(keys, jnp.log(q))
+        ids = jnp.where(sparams["temperature"] > 0,
+                        sampled.astype(jnp.int32), ids)
+    return ids, q, caches, draft_seen
+
+
+def draft_round(params, caches, draft_seen, t0, pos, caps, sparams, *,
+                cfg: ModelConfig, draft_layers: int, k: int, kv_len=None,
+                any_sampled=True, mesh=None):
+    """The whole k-step draft phase as ONE fused launch.
+
+    Statically unrolls k draft_sample_step calls (k is a jit-static
+    argument — the engine compiles one program per draft length, of
+    which there are at most k_max) so a round costs two device
+    dispatches (draft_round + spec_verify_step) instead of k+1; at
+    serving batch sizes the per-dispatch host overhead is comparable to
+    a whole draft step's compute, so this is where the wall-clock win
+    lives. t0: (B, 1) each slot's last committed token; caps: (B,)
+    per-slot draft budgets (draft i is real for slots with caps > i).
+    Returns (tok_mat (B, k+1) = [t_0, t_1..t_k], q_mat (B, k, V),
+    caches, draft_seen)."""
+    cur = t0
+    drafts, qs = [], []
+    for i in range(k):
+        dn = (caps > i).astype(jnp.int32)
+        ids, q, caches, draft_seen = draft_sample_step(
+            params, caches, draft_seen, cur, pos + i, dn, sparams, i,
+            cfg=cfg, draft_layers=draft_layers, kv_len=kv_len,
+            any_sampled=any_sampled, mesh=mesh)
+        drafts.append(ids)
+        qs.append(q)
+        cur = ids[:, None]
+    tok_mat = jnp.concatenate([t0, jnp.stack(drafts, axis=1)], axis=1)
+    return tok_mat, jnp.stack(qs, axis=1), caches, draft_seen
+
+
+# ---------------------------------------------------------------------------
+# accept: the rejection rule (pure math, RNG injected — numpy-mirrorable)
+# ---------------------------------------------------------------------------
+
+def rejection_rule(p_rows, q_rows, drafts, d, u):
+    """The standard speculative-sampling acceptance rule.
+
+    p_rows: (B, S, V) target distributions (row j predicts position
+    pos+j+1); q_rows: (B, S-1, V) draft distributions, ZEROED at rows
+    >= d_b; drafts: (B, S-1) drafted tokens; d: (B,) drafted counts;
+    u: (B, S-1) uniforms. Draft j is accepted while u_j * q_j(t_j) <
+    p_j(t_j) (== u < p/q); the correction row is the first reject — or
+    the bonus row d when all drafts were accepted — with residual
+    distribution norm(max(p - q, 0)); q is zero at the bonus row, so the
+    residual reduces to p there (the bonus token is a plain target
+    sample). Committed-token marginals equal the target's: q*min(1,p/q)
+    + P(reject)*resid = p. Returns (a (B,) accepted counts, resid
+    (B, V) the correction-row distribution)."""
+    B, S = p_rows.shape[0], p_rows.shape[1]
+    offs = jnp.arange(S - 1)[None]
+    p_tok = jnp.take_along_axis(p_rows[:, :-1], drafts[..., None],
+                                axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(q_rows, drafts[..., None], axis=-1)[..., 0]
+    acc = (u * q_tok < p_tok) & (offs < d[:, None])
+    a = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+    q_pad = jnp.concatenate(
+        [q_rows, jnp.zeros_like(q_rows[:, :1])], axis=1)
+    p_a = p_rows[jnp.arange(B), a]
+    q_a = q_pad[jnp.arange(B), a]
+    resid = jnp.maximum(p_a - q_a, 0.0)
+    rn = resid.sum(axis=-1, keepdims=True)
+    resid = jnp.where(rn > 0, resid / rn, p_a)
+    return a, resid
+
+
+# ---------------------------------------------------------------------------
+# verify: one chunked target step + accept + commit, fully on device
+# ---------------------------------------------------------------------------
+
+def spec_verify_step(params, caches, seen, tokens, pos, n_valid, sparams,
+                     q_probs, *, cfg: ModelConfig, kv_len=None,
+                     want_logprobs=False, any_sampled=True, mesh=None):
+    """Fused multi-token verify: ONE chunked decode_step over
+    [t_0, t_1..t_k] scores every draft, then acceptance + the
+    correction/bonus token are computed on device.
+
+    tokens: (B, S) — t_0 is each slot's last committed token, the rest
+    its drafts (rows >= n_valid are padding). q_probs: (B, S-1, V) the
+    drafts' processed distributions from draft_sample_step. Greedy slots
+    accept draft j iff it equals the penalty-adjusted argmax of target
+    row j; sampled slots run rejection_rule on identically-processed
+    p/q. Returns (committed (B, S) — tokens [t_1..t_a, correction],
+    zero-padded, n_committed (B,) == a+1, lps (B, S) chosen-token
+    logprobs or None, new caches, new seen). The persistent seen table
+    gains exactly the fed-and-committed prefix t_0..t_a."""
+    logits, caches = decode_step(params, cfg, caches, tokens, pos,
+                                 n_valid=n_valid, kv_len=kv_len, mesh=mesh)
+    B, S = tokens.shape
+    V = cfg.vocab_size
+    rows = logits[..., :V].astype(jnp.float32)                 # (B, S, V)
+    # progressive penalty support: row j sees seen ∪ {t_0..t_j}
+    oh = jax.nn.one_hot(tokens, V, dtype=bool)
+    occ = jnp.cumsum(oh, axis=1) > 0
+    row_seen = seen[:, None, :] | occ
+    rep = jnp.broadcast_to(sparams["rep_pen"][:, None], (B, S))
+    pen = _penalize(rows, rep, row_seen)
+    g_ids = jnp.argmax(pen, axis=-1).astype(jnp.int32)         # (B, S)
+    drafts = tokens[:, 1:]
+    d = jnp.maximum(n_valid - 1, 0)
+    offs = jnp.arange(S - 1)[None]
+
+    def count(match):
+        m = match & (offs < d[:, None])
+        return jnp.sum(jnp.cumprod(m.astype(jnp.int32), axis=1), axis=1)
+
+    a = count(drafts == g_ids[:, :-1])
+    corr = g_ids[jnp.arange(B), a]
+    if any_sampled:
+        def bc(v):
+            return jnp.broadcast_to(v[:, None], (B, S))
+        p = processed_dist(rows, bc(sparams["temperature"]),
+                           bc(sparams["top_k"]), bc(sparams["top_p"]),
+                           bc(sparams["min_p"]), rep, row_seen)
+        q = jnp.where(offs[..., None] < d[:, None, None], q_probs, 0.0)
+        keys = _round_keys(sparams, _VERIFY_TAG)
+        fold = jax.vmap(jax.random.fold_in)
+        u = jax.vmap(lambda k: jax.random.uniform(k, (S - 1,)))(
+            fold(keys, jnp.zeros_like(d)))
+        a_s, resid = rejection_rule(p, q, drafts, d, u)
+        corr_s = jax.vmap(jax.random.categorical)(
+            fold(keys, jnp.ones_like(d)), jnp.log(resid))
+        greedy = sparams["temperature"] <= 0
+        a = jnp.where(greedy, a, a_s)
+        corr = jnp.where(greedy, corr, corr_s.astype(jnp.int32))
+    idx = jnp.arange(S)[None]
+    drafts_pad = jnp.concatenate(
+        [drafts, jnp.zeros((B, 1), drafts.dtype)], axis=1)
+    committed = jnp.where(
+        idx < a[:, None], drafts_pad,
+        jnp.where(idx == a[:, None], corr[:, None], 0)).astype(jnp.int32)
+    n_committed = a + 1
+    new_seen = update_seen(seen, tokens, n_committed)
+    lps = None
+    if want_logprobs:
+        lsm = jax.nn.log_softmax(pen, axis=-1)
+        lps = jnp.take_along_axis(lsm, committed[..., None],
+                                  axis=-1)[..., 0]
+    return committed, n_committed, lps, caches, new_seen

@@ -1,13 +1,12 @@
 """Request API v2 tests: SamplingParams validation, the on-device
-sampler's filters, finish reasons / stop handling, the deprecated
-submit() shim, streaming, logprobs, and the kv_bucket regression.
+sampler's filters, finish reasons / stop handling, rejection of the
+removed legacy submit() forms, streaming, logprobs, and the kv_bucket
+regression.
 
 The heavier continuous==static oracles live in tests/test_serve.py
 (greedy 9-config suite + the seeded-sampling subset); this file covers
 the API contract itself.
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -247,34 +246,18 @@ def test_completion_timing_fields_are_ordered():
 
 
 # ---------------------------------------------------------------------------
-# deprecated submit() shim
+# submit() validation (legacy positional shim removed)
 # ---------------------------------------------------------------------------
 
-def test_legacy_submit_shim_warns_and_matches_v2():
-    params = init_params(KEY, CFG)
-    prompt = np.asarray(jax.random.randint(KEY, (6,), 0, CFG.vocab_size))
-    eos = 3
-    new = Engine(CFG, params, max_len=32, n_slots=2)
-    rid_new = new.submit(prompt, sampling=SamplingParams(
-        max_new=5, temperature=0.9, eos_id=eos, seed=17))
-    want = new.run()[rid_new]
-
-    old = Engine(CFG, params, max_len=32, n_slots=2)
-    with pytest.warns(DeprecationWarning, match="SamplingParams"):
-        rid_old = old.submit(prompt, 5, temperature=0.9, eos_id=eos,
-                             seed=17)
-    got = old.run()[rid_old]
-    assert list(got.tokens) == list(want.tokens)    # token-for-token
-    assert got.finish_reason == want.finish_reason
-
-
-def test_submit_rejects_mixed_and_missing_forms():
+def test_submit_rejects_legacy_and_missing_forms():
     params = init_params(KEY, CFG)
     eng = Engine(CFG, params, max_len=32, n_slots=1)
     with pytest.raises(TypeError):
-        eng.submit([1, 2])                          # neither form
-    with pytest.raises(TypeError):
-        eng.submit([1, 2], 4, sampling=SamplingParams(max_new=4))
+        eng.submit([1, 2])                          # sampling is required
+    with pytest.raises(TypeError):                  # old positional max_new
+        eng.submit([1, 2], 4)
+    with pytest.raises(TypeError):                  # old kwargs form
+        eng.submit([1, 2], sampling=None)
     prompts = jax.random.randint(KEY, (1, 4), 0, CFG.vocab_size)
     with pytest.raises(TypeError):                  # mixed generate form
         eng.generate(prompts, sampling=SamplingParams(max_new=2),

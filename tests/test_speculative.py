@@ -1,0 +1,521 @@
+"""Self-speculative decoding oracles (serve/speculative.py).
+
+The load-bearing guarantee: GREEDY speculative decode is TOKEN-IDENTICAL
+to the non-speculative continuous path on every serving oracle config —
+draft cache writes, the fused chunk verify, per-slot ragged acceptance,
+kv-bucket rewind and ring-row rollback may not change a single token.
+Sampled acceptance follows the standard rejection-sampling rule
+(verified against a numpy reference and by a Monte-Carlo marginal
+check), so committed-token marginals equal the target model's.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (AltUpConfig, MLAConfig, ModelConfig, MoEConfig,
+                          RWKVConfig)
+from repro.core import altup as alt
+from repro.models.decode import (decode_step, draft_step, init_cache,
+                                 prefill, recurrent_checkpoint,
+                                 restore_recurrent, restore_rows,
+                                 snapshot_rows)
+from repro.models.transformer import init_params
+from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingParams
+from repro.serve.speculative import (AdaptiveK, SpecConfig,
+                                     default_draft_layers, rejection_rule)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_cache():
+    # this module compiles the largest programs in the suite (chunked
+    # verify + statically-unrolled draft rounds across the full config
+    # grid); dropping the executables accumulated by the ~300 preceding
+    # tests keeps the CPU backend's compile arena small — full-suite
+    # runs have segfaulted inside LLVM under that combined load
+    jax.clear_caches()
+    yield
+    jax.clear_caches()
+
+
+CFG = ModelConfig(name="spec", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                  altup=AltUpConfig(K=2))
+
+# the tentpole oracle grid: dense/GQA/ring/MoE/MLA x fp32/int8/fp8
+ORACLE_CFGS = {
+    "dense": CFG,
+    "gqa": CFG.replace(name="spec-gqa", n_heads=4, n_kv_heads=2),
+    "ring": CFG.replace(name="spec-win", window_size=4),
+    "ring-int8": CFG.replace(name="spec-win8", window_size=4,
+                             kv_cache_dtype="int8"),
+    "int8": CFG.replace(name="spec-i8", kv_cache_dtype="int8"),
+    "fp8": CFG.replace(name="spec-f8", kv_cache_dtype="fp8"),
+    "moe": ModelConfig(name="spec-moe", family="moe", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, altup=AltUpConfig(K=2),
+                       moe=MoEConfig(num_experts=4, top_k=2, d_expert=32)),
+    "mla-moe": ModelConfig(name="spec-mla", family="mla_moe", n_layers=2,
+                           d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                           vocab_size=128, altup=AltUpConfig(K=2),
+                           mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8,
+                                         qk_nope_head_dim=8,
+                                         qk_rope_head_dim=4, v_head_dim=8),
+                           moe=MoEConfig(num_experts=4, top_k=2,
+                                         d_expert=32, first_dense_layers=1,
+                                         dense_d_ff=64)),
+}
+
+RWKV_CFG = ModelConfig(name="spec-rwkv", family="rwkv6", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, altup=AltUpConfig(K=2),
+                       rwkv=RWKVConfig(head_dim=16, decay_lora=8,
+                                       token_shift_lora=8))
+
+
+def _prompts(cfg, n=3):
+    return [list(np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, i), (4 + i,), 0, cfg.vocab_size)))
+        for i in range(n)]
+
+
+def _run(cfg, params, spec, prompts, n_news, sp_extra=None, **eng_kw):
+    eng = Engine(cfg, params, max_len=32, n_slots=2, speculative=spec,
+                 **eng_kw)
+    rids = [eng.submit(p, sampling=SamplingParams(max_new=n,
+                                                  **(sp_extra or {})))
+            for p, n in zip(prompts, n_news)]
+    out = eng.run()
+    return [out[r] for r in rids], eng
+
+
+# ---------------------------------------------------------------------------
+# the greedy oracle: spec == non-spec, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(ORACLE_CFGS))
+def test_greedy_spec_token_identical(name):
+    cfg = ORACLE_CFGS[name]
+    params = init_params(KEY, cfg)
+    prompts, n_news = _prompts(cfg), [6, 4, 7]
+    ref, _ = _run(cfg, params, False, prompts, n_news)
+    got, eng = _run(cfg, params, True, prompts, n_news)
+    assert eng.stats["spec_rounds"] > 0
+    for r, g in zip(ref, got):
+        assert list(g.tokens) == list(r.tokens)
+        assert g.finish_reason == r.finish_reason
+
+
+def test_full_depth_draft_accepts_everything():
+    # draft_layers == n_layers makes the draft the target model: every
+    # greedy draft must be accepted, and tokens still match non-spec
+    params = init_params(KEY, CFG)
+    prompts, n_news = _prompts(CFG), [6, 4, 7]
+    ref, _ = _run(CFG, params, False, prompts, n_news)
+    got, eng = _run(CFG, params, SpecConfig(draft_layers=CFG.n_layers),
+                    prompts, n_news)
+    assert [list(g.tokens) for g in got] == [list(r.tokens) for r in ref]
+    assert eng.stats["spec_drafted"] > 0
+    assert eng.stats["spec_accepted"] == eng.stats["spec_drafted"]
+
+
+def test_greedy_spec_logprobs_match_non_spec():
+    params = init_params(KEY, CFG)
+    prompts, n_news = _prompts(CFG), [5, 4, 6]
+    ref, _ = _run(CFG, params, False, prompts, n_news,
+                  sp_extra={"logprobs": True})
+    got, eng = _run(CFG, params, True, prompts, n_news,
+                    sp_extra={"logprobs": True})
+    assert eng.stats["spec_rounds"] > 0
+    for r, g in zip(ref, got):
+        assert list(g.tokens) == list(r.tokens)
+        np.testing.assert_allclose(g.logprobs, r.logprobs, atol=2e-5)
+
+
+def test_greedy_spec_with_repetition_penalty():
+    # progressive per-row penalty inside the verify chunk must match the
+    # token-by-token penalty of the non-speculative path
+    params = init_params(KEY, CFG)
+    prompts, n_news = _prompts(CFG), [8, 6, 8]
+    extra = {"repetition_penalty": 1.4}
+    ref, _ = _run(CFG, params, False, prompts, n_news, sp_extra=extra)
+    got, eng = _run(CFG, params, True, prompts, n_news, sp_extra=extra)
+    assert eng.stats["spec_rounds"] > 0
+    for r, g in zip(ref, got):
+        assert list(g.tokens) == list(r.tokens)
+
+
+def test_kv_bucket_boundary_rewind():
+    # prompt depth 7 puts the first spec round right at the 8 -> 16
+    # power-of-two kv-bucket crossing; rejected-suffix rewind across the
+    # bucket boundary must not perturb a single token
+    params = init_params(KEY, CFG)
+    prompts = [list(np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, 9), (7,), 0, CFG.vocab_size)))]
+    n_news = [10]
+    ref, _ = _run(CFG, params, False, prompts, n_news)
+    got, eng = _run(CFG, params, True, prompts, n_news)
+    assert eng.stats["spec_rounds"] > 0
+    assert list(got[0].tokens) == list(ref[0].tokens)
+
+
+def test_ring_wraparound_rewind_depth_gt_window():
+    # generation depth far past the ring window: every speculative round
+    # wraps rows, and each rejected suffix must restore them
+    cfg = ORACLE_CFGS["ring"]
+    params = init_params(KEY, cfg)
+    prompts = [list(np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, 3), (5,), 0, cfg.vocab_size)))]
+    n_news = [20]  # depth 25 >> window 4
+    ref, _ = _run(cfg, params, False, prompts, n_news)
+    got, eng = _run(cfg, params, True, prompts, n_news)
+    assert eng.stats["spec_rounds"] > 0
+    assert list(got[0].tokens) == list(ref[0].tokens)
+
+
+def test_eos_mid_round_truncation():
+    # make some mid-stream token the eos: the host commit loop must
+    # truncate the round at it and the post-verify restore must cover
+    # the device-committed-but-host-dropped suffix
+    params = init_params(KEY, CFG)
+    prompts, n_news = _prompts(CFG), [8, 8, 8]
+    ref, _ = _run(CFG, params, False, prompts, n_news)
+    eos = int(ref[0].tokens[2])
+    extra = {"eos_id": eos}
+    ref2, _ = _run(CFG, params, False, prompts, n_news, sp_extra=extra)
+    got, eng = _run(CFG, params, SpecConfig(draft_layers=CFG.n_layers),
+                    prompts, n_news, sp_extra=extra)
+    assert eng.stats["spec_rounds"] > 0
+    for r, g in zip(ref2, got):
+        assert list(g.tokens) == list(r.tokens)
+        assert g.finish_reason == r.finish_reason
+
+
+def test_seeded_sampling_runs_and_commits():
+    # sampled marginals differ per-path by construction (different RNG
+    # consumption); the contract is: completes, right lengths, and the
+    # same spec engine is reproducible run-to-run under the same seeds
+    params = init_params(KEY, CFG)
+    prompts, n_news = _prompts(CFG), [6, 4, 7]
+    extra = {"temperature": 0.9, "top_k": 40, "seed": 11}
+    a, eng = _run(CFG, params, True, prompts, n_news, sp_extra=extra)
+    b, _ = _run(CFG, params, True, prompts, n_news, sp_extra=extra)
+    assert eng.stats["spec_rounds"] > 0
+    assert [len(c.tokens) for c in a] == n_news
+    assert [list(c.tokens) for c in a] == [list(c.tokens) for c in b]
+
+
+def test_mixed_greedy_and_sampled_slots():
+    # greedy slot in the same round as a sampled slot: the greedy one
+    # must still match the non-spec greedy path token-for-token
+    params = init_params(KEY, CFG)
+    prompts, n_news = _prompts(CFG, 2), [8, 8]
+    ref, _ = _run(CFG, params, False, prompts, n_news)
+    eng = Engine(CFG, init_params(KEY, CFG), max_len=32, n_slots=2,
+                 speculative=True)
+    r0 = eng.submit(prompts[0], sampling=SamplingParams(max_new=8))
+    r1 = eng.submit(prompts[1], sampling=SamplingParams(
+        max_new=8, temperature=0.8, seed=5))
+    out = eng.run()
+    assert list(out[r0].tokens) == list(ref[0].tokens)
+    assert len(out[r1].tokens) == 8
+
+
+def test_recurrent_family_falls_back_to_normal_decode():
+    # recurrent state can't rewind mid-chunk: speculative=True must be a
+    # safe no-op (token-identical, zero spec rounds) for rwkv plans
+    params = init_params(KEY, RWKV_CFG)
+    prompts, n_news = _prompts(RWKV_CFG), [6, 4, 7]
+    ref, _ = _run(RWKV_CFG, params, False, prompts, n_news)
+    got, eng = _run(RWKV_CFG, params, True, prompts, n_news)
+    assert eng.stats["spec_rounds"] == 0
+    for r, g in zip(ref, got):
+        assert list(g.tokens) == list(r.tokens)
+
+
+# ---------------------------------------------------------------------------
+# stream ordering (satellite: multi-token steps)
+# ---------------------------------------------------------------------------
+
+def test_stream_spec_multi_token_deltas_in_generation_order():
+    # a speculative round commits k+1 tokens for one rid in one step;
+    # stream() must yield them strictly in generation order
+    params = init_params(KEY, CFG)
+    prompts, n_news = _prompts(CFG), [6, 4, 7]
+    eng = Engine(CFG, params, max_len=32, n_slots=2,
+                 speculative=SpecConfig(draft_layers=CFG.n_layers))
+    rids = [eng.submit(p, sampling=SamplingParams(max_new=n))
+            for p, n in zip(prompts, n_news)]
+    deltas = list(eng.stream())
+    per_rid = {r: [] for r in rids}
+    for rid, tok in deltas:
+        per_rid[rid].append(tok)
+    out = eng.collect()
+    assert eng.stats["spec_accepted"] > 0   # multi-token steps happened
+    assert len(deltas) == sum(n_news)
+    for r in rids:
+        assert per_rid[r] == list(out[r].tokens)
+
+
+# ---------------------------------------------------------------------------
+# the rejection rule (pure math, RNG injected)
+# ---------------------------------------------------------------------------
+
+def _np_rejection_reference(p, q, drafts, d, u):
+    """Token-by-token numpy mirror of speculative.rejection_rule."""
+    B, S, V = p.shape
+    a = np.zeros(B, np.int32)
+    resid = np.zeros((B, V))
+    for b in range(B):
+        j = 0
+        while j < d[b] and u[b, j] * q[b, j, drafts[b, j]] \
+                < p[b, j, drafts[b, j]]:
+            j += 1
+        a[b] = j
+        qj = q[b, j] if j < S - 1 and j < d[b] else np.zeros(V)
+        r = np.maximum(p[b, j] - qj, 0.0)
+        resid[b] = r / r.sum() if r.sum() > 0 else p[b, j]
+    return a, resid
+
+
+def test_rejection_rule_matches_numpy_reference():
+    rng = np.random.default_rng(7)
+    B, S, V = 16, 4, 12
+    p = rng.dirichlet(np.ones(V), (B, S))
+    q = rng.dirichlet(np.ones(V), (B, S - 1))
+    d = rng.integers(0, S, B)
+    # zero q at rows >= d (the caller's contract)
+    q = q * (np.arange(S - 1)[None, :, None] < d[:, None, None])
+    drafts = rng.integers(0, V, (B, S - 1))
+    u = rng.uniform(size=(B, S - 1))
+    a, resid = rejection_rule(jnp.asarray(p), jnp.asarray(q),
+                              jnp.asarray(drafts), jnp.asarray(d),
+                              jnp.asarray(u))
+    a_ref, resid_ref = _np_rejection_reference(p, q, drafts, d, u)
+    np.testing.assert_array_equal(np.asarray(a), a_ref)
+    np.testing.assert_allclose(np.asarray(resid), resid_ref, atol=1e-6)
+
+
+def test_rejection_rule_marginals_match_target():
+    # Monte Carlo over (draft ~ q, u ~ U[0,1]): the committed first
+    # token — draft if accepted, else a residual sample — must be
+    # distributed exactly as the target p. This is THE reason sampled
+    # speculative decoding is lossless.
+    rng = np.random.default_rng(3)
+    V, N = 8, 4000
+    p = rng.dirichlet(np.ones(V))
+    q = rng.dirichlet(np.ones(V))
+    drafts = rng.choice(V, size=N, p=q)
+    u = rng.uniform(size=N)
+    a, resid = rejection_rule(
+        jnp.broadcast_to(jnp.asarray(p), (N, 2, V)),
+        jnp.asarray(q)[None, None].repeat(N, 0),
+        jnp.asarray(drafts)[:, None], jnp.ones(N, jnp.int32),
+        jnp.asarray(u)[:, None])
+    a, resid = np.asarray(a), np.asarray(resid)
+    committed = np.where(a >= 1, drafts,
+                         [rng.choice(V, p=r / r.sum()) for r in resid])
+    emp = np.bincount(committed, minlength=V) / N
+    np.testing.assert_allclose(emp, p, atol=0.035)
+
+
+def test_rejection_rule_identical_dists_always_accept():
+    V = 8
+    p = np.full((4, 3, V), 1.0 / V)
+    q = np.full((4, 2, V), 1.0 / V)
+    drafts = np.tile(np.arange(2)[None], (4, 1))
+    d = np.full(4, 2)
+    u = np.full((4, 2), 1.0 - 1e-6)   # u < 1 == p/q accepts
+    a, _ = rejection_rule(*map(jnp.asarray, (p, q, drafts, d, u)))
+    np.testing.assert_array_equal(np.asarray(a), d)
+
+
+# ---------------------------------------------------------------------------
+# draft path unit tests
+# ---------------------------------------------------------------------------
+
+def test_compose_predictors_matches_sequential():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    n, K, d = 4, 2, 8
+    p_stack = jax.random.normal(k1, (n, K, K))
+    x = jax.random.normal(k2, (2, 3, K, d))
+    for start in range(n + 1):
+        seq = x
+        for i in range(start, n):
+            seq = alt.predict(seq, p_stack[i])
+        comp = alt.compose_predictors(p_stack, start=start)
+        np.testing.assert_allclose(np.asarray(alt.predict(x, comp)),
+                                   np.asarray(seq), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(alt.compose_predictors(p_stack, start=n)),
+        np.eye(K), atol=0)
+
+
+def test_draft_step_full_depth_matches_decode_step():
+    # draft_layers == n_layers: the "draft" IS the target model — logits
+    # and every cache leaf must be bit-identical to decode_step
+    params = init_params(KEY, CFG)
+    toks = jax.random.randint(KEY, (2, 6), 0, CFG.vocab_size)
+    _, caches = prefill(params, CFG, toks, 16)
+    nxt = jax.random.randint(jax.random.fold_in(KEY, 1), (2, 1), 0,
+                             CFG.vocab_size)
+    ref_logits, ref_c = decode_step(params, CFG, caches, nxt, 6)
+    got_logits, got_c = draft_step(params, CFG, caches, nxt, 6,
+                                   draft_layers=CFG.n_layers)
+    np.testing.assert_array_equal(np.asarray(ref_logits),
+                                  np.asarray(got_logits))
+    jax.tree_util.tree_map(
+        lambda r, g: np.testing.assert_array_equal(np.asarray(r),
+                                                   np.asarray(g)),
+        ref_c, got_c)
+
+
+def test_draft_step_partial_writes_head_caches_only():
+    # a depth-1 draft on a 2-layer model must write layer 0's cache rows
+    # exactly as decode_step does and leave layer 1's untouched
+    params = init_params(KEY, CFG)
+    toks = jax.random.randint(KEY, (2, 5), 0, CFG.vocab_size)
+    _, caches = prefill(params, CFG, toks, 16)
+    nxt = jax.random.randint(jax.random.fold_in(KEY, 2), (2, 1), 0,
+                             CFG.vocab_size)
+    _, full_c = decode_step(params, CFG, caches, nxt, 5)
+    _, draft_c = draft_step(params, CFG, caches, nxt, 5, draft_layers=1)
+    for leaf in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(draft_c["seg0"][leaf][0]),
+            np.asarray(full_c["seg0"][leaf][0]))       # head: true values
+        np.testing.assert_array_equal(
+            np.asarray(draft_c["seg0"][leaf][1]),
+            np.asarray(caches["seg0"][leaf][1]))       # tail: untouched
+
+
+# ---------------------------------------------------------------------------
+# rollback primitives (satellite: rollback edge coverage)
+# ---------------------------------------------------------------------------
+
+def _dirty_ring(cfg, params, caches, pos, S):
+    """Overwrite the ring rows a spec round touches with real writes."""
+    toks = jax.random.randint(jax.random.fold_in(KEY, 4), (2, S), 0,
+                              cfg.vocab_size)
+    _, dirty = decode_step(params, cfg, caches, toks,
+                           jnp.full((2,), pos, jnp.int32),
+                           n_valid=jnp.full((2,), S, jnp.int32))
+    return dirty
+
+
+@pytest.mark.parametrize("name", ["ring", "ring-int8"])
+def test_ring_snapshot_restore_roundtrip(name):
+    # wraparound depth: pos 13 >> window 4 — snapshot, clobber the rows
+    # with real (quantized) writes, full restore -> bit-identical cache,
+    # codes AND scale leaves in lockstep
+    cfg = ORACLE_CFGS[name]
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 13), 0, cfg.vocab_size)
+    _, caches = prefill(params, cfg, toks, 16)
+    pos, S = 13, 3
+    snap = snapshot_rows(cfg, caches, pos, S)
+    assert snap and all(e for e in snap.values())
+    if "int8" in name:
+        assert "k_scale" in snap["seg0"] and "v_scale" in snap["seg0"]
+    dirty = _dirty_ring(cfg, params, caches, pos, S)
+    changed = any(
+        not np.array_equal(np.asarray(dirty["seg0"][l]),
+                           np.asarray(caches["seg0"][l]))
+        for l in snap["seg0"])
+    assert changed
+    restored = restore_rows(cfg, dirty, snap, pos, 0, S)
+    for leaf in snap["seg0"]:
+        np.testing.assert_array_equal(
+            np.asarray(restored["seg0"][leaf]),
+            np.asarray(caches["seg0"][leaf]))
+
+
+def test_ring_partial_restore_respects_per_slot_start():
+    # slot 0 committed 1 of 3 rows (restore rows 1..2), slot 1 all 3
+    # (restore nothing): restore start is a per-slot vector
+    cfg = ORACLE_CFGS["ring"]
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 9), 0, cfg.vocab_size)
+    _, caches = prefill(params, cfg, toks, 16)
+    pos, S, W = 9, 3, 4
+    snap = snapshot_rows(cfg, caches, pos, S)
+    dirty = _dirty_ring(cfg, params, caches, pos, S)
+    restored = restore_rows(cfg, dirty, snap, pos,
+                            jnp.asarray([1, 3], jnp.int32), S)
+    k_old = np.asarray(caches["seg0"]["k"])
+    k_new = np.asarray(restored["seg0"]["k"])
+    k_dirty = np.asarray(dirty["seg0"]["k"])
+    for j in range(S):
+        row = (pos + j) % W
+        # slot 0: row 0 keeps the dirty write, rows 1..2 restored
+        np.testing.assert_array_equal(
+            k_new[:, 0, row], (k_dirty if j < 1 else k_old)[:, 0, row])
+        # slot 1: nothing restored
+        np.testing.assert_array_equal(k_new[:, 1, row],
+                                      k_dirty[:, 1, row])
+
+
+def test_recurrent_checkpoint_restore_roundtrip():
+    params = init_params(KEY, RWKV_CFG)
+    toks = jax.random.randint(KEY, (2, 5), 0, RWKV_CFG.vocab_size)
+    _, caches = prefill(params, RWKV_CFG, toks, 16)
+    snap = recurrent_checkpoint(caches)
+    assert snap, "rwkv plan must expose recurrent leaves"
+    nxt = jax.random.randint(jax.random.fold_in(KEY, 5), (2, 1), 0,
+                             RWKV_CFG.vocab_size)
+    _, dirty = decode_step(params, RWKV_CFG, caches, nxt, 5)
+    restored = restore_recurrent(dirty, snap)
+    for seg, entry in snap.items():
+        for leaf in entry:
+            np.testing.assert_array_equal(
+                np.asarray(restored[seg][leaf]),
+                np.asarray(caches[seg][leaf]))
+
+
+# ---------------------------------------------------------------------------
+# adaptive-k controller
+# ---------------------------------------------------------------------------
+
+def test_adaptive_k_raises_lowers_and_clamps():
+    sc = SpecConfig(k_max=4, k_init=2)
+    ctl = AdaptiveK(sc)
+    for _ in range(8):
+        ctl.update(4, 4)          # perfect acceptance
+    assert ctl.k == 4             # ramped to k_max, no further
+    for _ in range(12):
+        ctl.update(0, 4)          # total rejection
+    assert ctl.k == 1             # floored at 1
+    capped = AdaptiveK(sc, k_cap=2)
+    for _ in range(8):
+        capped.update(4, 4)
+    assert capped.k == 2          # ring-window cap wins over k_max
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(k_max=0)
+    with pytest.raises(ValueError):
+        SpecConfig(k_init=5, k_max=4)
+    with pytest.raises(ValueError):
+        SpecConfig(raise_at=0.2, lower_at=0.4)
+    assert default_draft_layers(CFG) == 1
+
+
+def test_engine_stats_accounting():
+    params = init_params(KEY, CFG)
+    prompts, n_news = _prompts(CFG), [6, 4, 7]
+    _, eng = _run(CFG, params, True, prompts, n_news)
+    st = eng.stats
+    assert st["spec_drafted"] >= st["spec_accepted"] >= 0
+    assert st["spec_k_sum"] >= st["spec_rounds"] >= 1
+    # same convention as the non-speculative engine (test_serve.py's
+    # kv-bucket test): the first sampled token rides on the last
+    # prefill chunk, so the decode phase feeds max_new - 1 per request
+    assert st["decode_tokens"] == sum(n - 1 for n in n_news)
+    # speculation's point: fewer launches than tokens committed
+    assert st["steps"] < sum(n_news)

@@ -25,7 +25,7 @@ TOP_KEYS = (
     "static", "continuous", "continuous_int8",
     "throughput_speedup", "int8_tokens_per_s_delta",
     "kv_bytes_per_token_by_dtype", "host_transfer_bytes_per_step",
-    "shared_prefix", "speculative",
+    "shared_prefix", "speculative", "paged",
 )
 RUN_KEYS = ("name", "tokens_per_s", "ms_per_token_p50",
             "ms_per_token_p99", "makespan_s")
@@ -49,6 +49,11 @@ BYTES_MODEL_KEYS = ("draft_step_bytes", "verify_chunk_bytes",
                     "round_bytes", "tokens_per_round",
                     "spec_bytes_per_token", "baseline_bytes_per_token",
                     "bytes_speedup")
+PAGED_KEYS = ("n_requests", "n_slots", "page_size", "n_pages",
+              "n_full_slots", "paged_run", "contiguous_equal_mem",
+              "concurrency_peak", "pages_in_use_peak", "page_share_rate",
+              "alias_acquisitions", "fresh_acquisitions", "spills",
+              "restores", "paged_speedup")
 
 
 def check(path: str) -> None:
@@ -121,6 +126,34 @@ def check(path: str) -> None:
     missing = [k for k in BYTES_MODEL_KEYS if k not in sv["bytes_model"]]
     assert not missing, f"{path}: bytes_model missing keys {missing}"
     assert sv["bytes_model"]["bytes_speedup"] > 0
+    # paged KV cache on the over-commit burst: the pool holds only
+    # n_full_slots full-length requests' worth of KV, so the paged
+    # engine exceeding that concurrency is the layout's acceptance gate
+    # (deterministic by burst construction — short shared-prefix
+    # requests reserve few pages each); the occupancy/share counters
+    # are hard-bounded and only the measured speedup is timing-dependent
+    pg = payload["paged"]
+    missing = [k for k in PAGED_KEYS if k not in pg]
+    assert not missing, f"{path}: paged missing keys {missing}"
+    for run in ("paged_run", "contiguous_equal_mem"):
+        missing = [k for k in RUN_KEYS if k not in pg[run]]
+        assert not missing, f"{path}: paged[{run}] missing keys {missing}"
+    assert 0 < pg["n_full_slots"] < pg["n_slots"], \
+        f"{path}: the paged burst must over-commit slots against the " \
+        f"pool (n_full_slots={pg['n_full_slots']} vs " \
+        f"n_slots={pg['n_slots']})"
+    assert pg["concurrency_peak"] > pg["n_full_slots"], \
+        f"{path}: paged run never exceeded the contiguous slot count " \
+        f"({pg['concurrency_peak']} <= {pg['n_full_slots']}) — the " \
+        f"over-commit layout bought nothing"
+    assert 0 < pg["pages_in_use_peak"] <= pg["n_pages"], \
+        f"{path}: pages_in_use_peak {pg['pages_in_use_peak']} outside " \
+        f"(0, n_pages={pg['n_pages']}]"
+    assert 0.0 <= pg["page_share_rate"] <= 1.0, \
+        f"{path}: page_share_rate {pg['page_share_rate']} out of [0, 1]"
+    assert pg["alias_acquisitions"] > 0, \
+        f"{path}: shared-prefix burst recorded no page aliasing"
+    assert pg["paged_run"]["tokens_per_s"] > 0 and pg["paged_speedup"] > 0
     print(f"ok: {path}")
 
 

@@ -111,9 +111,16 @@ def _fa_kernel(q_ref, k_ref, v_ref, *rest, scale: float, causal: bool,
                     / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _fa_paged_kernel(bt_ref, *rest, **kw):
+    # the block table only steers the index maps; the compute body is the
+    # contiguous kernel on logical block positions, unchanged
+    _fa_kernel(*rest, **kw)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     k_scale: jax.Array | None = None,
                     v_scale: jax.Array | None = None,
+                    block_table: jax.Array | None = None,
                     causal: bool = True, window: int = 0,
                     scale: float | None = None, block_q: int = 128,
                     block_k: int = 128,
@@ -122,6 +129,18 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     k_scale/v_scale: optional (BH, T) f32 per-row dequant scales for
     quantized (int8/fp8-code) k/v — dequant is fused into the kv-tile
     load.
+
+    block_table: optional (BH, nk) int32 — PAGED mode. k/v are then
+    BLOCK POOLS (NB, bk, dh) shared across rows (bk = k.shape[1], the
+    page size), scales (NB, bk), and row b's logical kv block j lives at
+    pool block block_table[b, j]. The table rides as a scalar-prefetch
+    operand and the kv index map composes the lookup with the existing
+    skip remap: a skipped block re-fetches the diagonal block's PHYSICAL
+    page, so the elided-copy trick (no HBM reads for masked blocks)
+    survives paging. Compute/masking runs on logical positions and is
+    identical to the contiguous kernel on the gathered rows; with
+    causal=True, garbage rows in the tail pages (logical position >= S)
+    are masked/skipped exactly like padded contiguous rows.
 
     Returns (BH, S, dh). interpret=None auto-detects from the backend
     (compiled on TPU, interpreted on CPU).
@@ -132,33 +151,57 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     quantized = k_scale is not None
     assert (k_scale is None) == (v_scale is None), \
         "pass both k_scale and v_scale, or neither"
+    paged = block_table is not None
     BH, S, dh = q.shape
-    T = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(dh)
     bq = min(block_q, S)
-    bk = min(block_k, T)
-    assert S % bq == 0 and T % bk == 0
-    nq, nk = S // bq, T // bk
+    assert S % bq == 0
+    nq = S // bq
+    if paged:
+        bk = k.shape[1]                      # pool blocks ARE the pages
+        nk = block_table.shape[1]
+        assert causal or window > 0, \
+            "paged flash needs causal/window masking to cover tail pages"
+    else:
+        T = k.shape[1]
+        bk = min(block_k, T)
+        assert T % bk == 0
+        nk = T // bk
     kern = functools.partial(_fa_kernel, scale=scale, causal=causal,
                              window=window, block_q=bq, block_k=bk, nk=nk,
                              quantized=quantized)
 
-    def kv_map(b, i, j):
+    def _logical_j(i, j):
         # remap skipped blocks' fetch to q-block i's diagonal kv block
         # (always unskipped): the repeated index elides the copy on TPU
         if not (causal or window > 0):
-            return (b, j, 0)
+            return j
         skip = _block_skipped(i, j, causal=causal, window=window,
                               block_q=bq, block_k=bk)
-        return (b, jnp.where(skip, (i * bq) // bk, j), 0)
+        return jnp.where(skip, (i * bq) // bk, j)
 
-    def scale_map(b, i, j):
-        # same remap: a skipped kv block skips its scale fetch too
-        bj = kv_map(b, i, j)[1]
-        return (b, bj)
+    if paged:
+        def kv_map(b, i, j, bt):
+            # skip remap composes with the table: physical page of the
+            # (possibly remapped) logical block
+            return (bt[b, _logical_j(i, j)], 0, 0)
+
+        def scale_map(b, i, j, bt):
+            return (bt[b, _logical_j(i, j)], 0)
+
+        q_map = lambda b, i, j, bt: (b, i, 0)
+    else:
+        def kv_map(b, i, j):
+            return (b, _logical_j(i, j), 0)
+
+        def scale_map(b, i, j):
+            # same remap: a skipped kv block skips its scale fetch too
+            return (b, _logical_j(i, j))
+
+        q_map = lambda b, i, j: (b, i, 0)
 
     in_specs = [
-        pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bq, dh), q_map),
         pl.BlockSpec((1, bk, dh), kv_map),
         pl.BlockSpec((1, bk, dh), kv_map),
     ]
@@ -169,16 +212,34 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         operands += [k_scale.astype(jnp.float32),
                      v_scale.astype(jnp.float32)]
 
+    scratch_shapes = [
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, dh), jnp.float32),
+    ]
+    out_spec = pl.BlockSpec((1, bq, dh), q_map)
+    out_shape = jax.ShapeDtypeStruct((BH, S, dh), q.dtype)
+    if paged:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(BH, nq, nk),
+            in_specs=in_specs,
+            out_specs=out_spec,
+            scratch_shapes=scratch_shapes,
+        )
+        return pl.pallas_call(
+            functools.partial(_fa_paged_kernel, **kern.keywords),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(block_table.astype(jnp.int32), *operands)
+
     return pl.pallas_call(
         kern,
         grid=(BH, nq, nk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, dh), jnp.float32),
-        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(*operands)

@@ -80,6 +80,34 @@ def ragged_decode_attn(q, k, v, lengths, k_scale=None, v_scale=None, *,
     return o.reshape(B, 1, H, dh)
 
 
+@partial(jax.jit, static_argnames=("page", "t_max", "block_k"))
+def paged_ragged_decode_attn(q, k_pool, v_pool, lengths, block_table,
+                             k_scale=None, v_scale=None, *, page, t_max,
+                             block_k=None):
+    """Paged-pool variant of `ragged_decode_attn`.
+
+    q: (B, 1, H, dh) single-token queries; k_pool/v_pool: (R, Hk, dh)
+    batchless row pools (R = n_pages * page); block_table: (B, npages)
+    int32 physical-page ids per logical page; lengths: (B,) fill depths.
+    k_scale/v_scale: optional (R, Hk) f32 pool scales (quantized caches).
+    t_max: static logical read bound (the kv bucket). The kernel indexes
+    KV pages through the block table in its scalar-prefetch index map —
+    no gathered copy of the cache is ever materialized. block_k is
+    accepted for signature parity and ignored (the page is the block).
+    Returns (B, 1, H, dh).
+    """
+    del block_k
+    B, S, H, dh = q.shape
+    assert S == 1, "paged ragged decode kernel is single-token (S=1) only"
+    Hk = k_pool.shape[1]
+    rep = H // Hk
+    qg = q[:, 0].reshape(B, Hk, rep, dh)
+    o = ragged_mod.paged_ragged_decode_attention(
+        qg, k_pool, v_pool, lengths, block_table, page=page, t_max=t_max,
+        k_scale=k_scale, v_scale=v_scale, interpret=_INTERPRET)
+    return o.reshape(B, 1, H, dh)
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
 def mha_flash(q, k, v, k_scale=None, v_scale=None, *, causal=True,
               window=0, block_q=128, block_k=128):
@@ -103,6 +131,52 @@ def mha_flash(q, k, v, k_scale=None, v_scale=None, *, causal=True,
     o = flash_attention.flash_attention(
         fold(q), fold(kx), fold(vx), causal=causal, window=window,
         block_q=block_q, block_k=block_k, interpret=_INTERPRET, **scales)
+    return o.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("page", "causal", "window", "block_q"))
+def mha_flash_paged(q, k_pool, v_pool, block_table, k_scale=None,
+                    v_scale=None, *, page, causal=True, window=0,
+                    block_q=128):
+    """Flash attention over a PAGED kv pool (prefill/verify reads).
+
+    q: (B, S, H, dh); k_pool/v_pool: (R, Hk, dh) batchless row pools
+    (R = n_pages * page); block_table: (B, npages) physical-page ids;
+    k_scale/v_scale: optional (R, Hk) f32 pool scales. The pool is viewed
+    per kv head as page blocks and only the BLOCK TABLE is expanded for
+    the GQA head fold — k/v codes are never repeated or gathered in HBM;
+    the kernel's index map reads each physical page directly. Requires
+    causal masking (garbage tail-page rows at logical positions >= the
+    valid count are masked/skipped like padded contiguous rows) and the
+    caller guarantees logical row t is valid iff t < S.
+    Returns (B, S, H, dh).
+    """
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both k_scale and v_scale, or neither"
+    B, S, H, dh = q.shape
+    R, Hk = k_pool.shape[0], k_pool.shape[1]
+    rep = H // Hk
+    NP = R // page
+    # (R, Hk, dh) -> per-kv-head page blocks (Hk*NP, page, dh): head h's
+    # copy of physical page p is pool block h*NP + p — pure reshape views,
+    # no data duplication beyond the transpose
+    pool = lambda t: (t.reshape(NP, page, Hk, dh)
+                      .transpose(2, 0, 1, 3).reshape(Hk * NP, page, dh))
+    nk = block_table.shape[1]
+    # folded row b*H + h (ops.mha_flash fold order) reads kv head h//rep
+    kvh = jnp.arange(H) // rep                             # (H,)
+    btf = (kvh[None, :, None] * NP
+           + block_table.astype(jnp.int32)[:, None, :]).reshape(B * H, nk)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], dh)
+    scales = {}
+    if k_scale is not None:
+        pools = lambda s: (s.reshape(NP, page, Hk).transpose(2, 0, 1)
+                           .reshape(Hk * NP, page).astype(jnp.float32))
+        scales = {"k_scale": pools(k_scale), "v_scale": pools(v_scale)}
+    o = flash_attention.flash_attention(
+        fold(q), pool(k_pool), pool(v_pool), block_table=btf,
+        causal=causal, window=window, block_q=block_q,
+        interpret=_INTERPRET, **scales)
     return o.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
 
 

@@ -38,6 +38,12 @@ under quantization. See docs/kernels.md for the bytes model.
 Empty slots (length 0) produce exact zeros (the engine ignores their
 logits); boundary blocks of a T % block_k != 0 cache are handled by
 masking the padded rows out of both the scores and the value read.
+
+`paged_ragged_decode_attention` is the block-table variant for the paged
+KV pool (serve/paging.py): k/v arrive as batchless row pools and a
+second scalar-prefetch operand — the per-slot block table — relocates
+each logical kv page to its physical pool page inside the index map.
+Same compute body, same clamp, same zero-reads-past-fill guarantee.
 """
 from __future__ import annotations
 
@@ -101,6 +107,104 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, *rest, scale: float, block_k: int,
     def _finish():
         o_ref[0, 0] = (acc_scr[...]
                        / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_kernel(len_ref, bt_ref, *rest, scale: float, block_k: int,
+                  nk: int, quantized: bool):
+    # the block table is consumed entirely by the index maps; the compute
+    # body is the contiguous kernel unchanged (logical positions j*page+i
+    # are what the fill-depth mask needs, and the grid hands it logical j)
+    del bt_ref
+    _kernel(len_ref, *rest, scale=scale, block_k=block_k, nk=nk,
+            quantized=quantized)
+
+
+def paged_ragged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                                  lengths: jax.Array,
+                                  block_table: jax.Array, *,
+                                  page: int, t_max: int,
+                                  k_scale: jax.Array | None = None,
+                                  v_scale: jax.Array | None = None,
+                                  scale: float | None = None,
+                                  interpret: bool | None = None) -> jax.Array:
+    """Block-table variant: k, v are ROW POOLS (R, Hk, Dh) shared by all
+    slots (R = n_pages * page rows), and each slot's cache is the page
+    sequence named by its block-table row. q: (B, Hk, rep, Dh) grouped
+    queries; lengths: (B,) fill depths; block_table: (B, npages) int32
+    physical-page ids for logical pages 0..npages-1 (entries past a
+    slot's fill are garbage and never fetched). k_scale/v_scale: optional
+    (R, Hk) f32 pool scales. t_max: static logical read bound (the kv
+    bucket) — the kv grid covers cdiv(t_max, page) logical pages.
+
+    The pool is viewed as (n_pages, page, Hk, Dh) and the kv index map
+    composes the block-table lookup with the SAME last-needed-block clamp
+    as the contiguous kernel: grid step j fetches physical page
+    block_table[b, min(j, last_b)], so steps past a slot's fill depth
+    re-fetch the page already resident in VMEM (elided copy — the
+    zero-reads-past-fill guarantee survives paging). Compute/masking is
+    `_kernel` verbatim on logical positions, so outputs are identical to
+    the contiguous kernel on the gathered rows. block_k == page (one
+    page per grid step)."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
+    quantized = k_scale is not None
+    assert (k_scale is None) == (v_scale is None), \
+        "pass both k_scale and v_scale, or neither"
+    B, Hk, rep, dh = q.shape
+    R = k.shape[0]
+    assert R % page == 0, (R, page)
+    n_pages = R // page
+    kp = k.reshape(n_pages, page, Hk, dh)
+    vp = v.reshape(n_pages, page, Hk, dh)
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    nk = pl.cdiv(t_max, page)
+    assert nk <= block_table.shape[1], (t_max, page, block_table.shape)
+    lengths = lengths.astype(jnp.int32)
+    block_table = block_table.astype(jnp.int32)
+
+    def kv_map(b, h, j, lens, bt):
+        # same clamp as the contiguous kernel, then through the table:
+        # past-fill grid steps re-fetch a resident page (elided copy)
+        last = jnp.maximum(pl.cdiv(lens[b], page) - 1, 0)
+        return (bt[b, jnp.minimum(j, last)], 0, h, 0)
+
+    def scale_map(b, h, j, lens, bt):
+        last = jnp.maximum(pl.cdiv(lens[b], page) - 1, 0)
+        return (bt[b, jnp.minimum(j, last)], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, dh), lambda b, h, j, lens, bt: (b, h, 0, 0)),
+        pl.BlockSpec((1, page, 1, dh), kv_map),
+        pl.BlockSpec((1, page, 1, dh), kv_map),
+    ]
+    operands = [q, kp, vp]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page, 1), scale_map),
+                     pl.BlockSpec((1, page, 1), scale_map)]
+        operands += [k_scale.reshape(n_pages, page, Hk).astype(jnp.float32),
+                     v_scale.reshape(n_pages, page, Hk).astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hk, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, rep, dh),
+                               lambda b, h, j, lens, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, dh), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_paged_kernel, scale=scale, block_k=page,
+                             nk=nk, quantized=quantized)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rep, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, block_table, *operands)
 
 
 def ragged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,

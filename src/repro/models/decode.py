@@ -137,6 +137,113 @@ def init_cache(cfg: ModelConfig, B: int, T: int,
     return caches
 
 
+def init_paged_cache(cfg: ModelConfig, B: int, T: int, *, n_pages: int,
+                     page: int, dtype=None) -> Dict[str, Any]:
+    """Zero PAGED caches: row-indexed leaves (attention k/v + scales, MLA
+    latents) drop the per-slot batch axis and pool all rows — R =
+    n_pages * page physical rows shared by every slot through a
+    (B, ceil(T/page)) block table (serve/paging.PagePool). A page is
+    `page` CONTIGUOUS pool rows; logical row q of a slot lives at
+    physical row bt[b, q // page] * page + q % page, and quantized scale
+    leaves ride the same physical rows so codes + scales stay in page
+    lockstep for free. Ring segments use the same pool through the same
+    table (only logical rows < min(window, table capacity) are ever
+    touched). Recurrent state (rwkv/mamba + token-shift/conv tails)
+    stays per-slot (n, B, ...): it is O(1) per request, not O(T).
+    encdec is never served through the paged path."""
+    assert cfg.family != "encdec", "paged caches serve decoder-only models"
+    spec = kv_quant_spec(cfg)
+    ad = dtype or act_dtype(cfg)
+    kd = spec.store_dtype if spec.quantized else (dtype or spec.store_dtype)
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hk = cfg.n_kv_heads
+    R = n_pages * page
+    caches: Dict[str, Any] = {}
+    for si, seg in enumerate(layer_plan(cfg)):
+        n = seg.n
+        if seg.kind == "attn":
+            c = {"k": jnp.zeros((n, R, hk, dh), kd),
+                 "v": jnp.zeros((n, R, hk, dh), kd)}
+            if spec.quantized:
+                c["k_scale"] = jnp.zeros((n, R, hk), jnp.float32)
+                c["v_scale"] = jnp.zeros((n, R, hk), jnp.float32)
+        elif seg.kind == "shared_attn":
+            c = {"k": jnp.zeros((R, hk, dh), kd),
+                 "v": jnp.zeros((R, hk, dh), kd)}
+            if spec.quantized:
+                c["k_scale"] = jnp.zeros((R, hk), jnp.float32)
+                c["v_scale"] = jnp.zeros((R, hk), jnp.float32)
+        elif seg.kind == "mla":
+            w = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            c = {"latent": jnp.zeros((n, R, w), kd)}
+            if spec.quantized:
+                c["latent_scale"] = jnp.zeros((n, R), jnp.float32)
+        elif seg.kind == "rwkv":
+            H = d // cfg.rwkv.head_dim
+            hd = cfg.rwkv.head_dim
+            c = {"wkv": jnp.zeros((n, B, H, hd, hd), jnp.float32),
+                 "shift_tm": jnp.zeros((n, B, d), ad),
+                 "shift_cm": jnp.zeros((n, B, d), ad)}
+        elif seg.kind == "mamba":
+            s = cfg.ssm
+            d_in = s.expand * d
+            H = d_in // s.head_dim
+            cc = d_in + 2 * s.d_state
+            c = {"ssm": jnp.zeros((n, B, H, s.head_dim, s.d_state),
+                                  jnp.float32),
+                 "conv": jnp.zeros((n, B, s.d_conv - 1, cc), ad)}
+        else:
+            raise ValueError(seg.kind)
+        caches[f"seg{si}"] = c
+    return caches
+
+
+def _paged_row_axis(name: str, ndim: int) -> Optional[int]:
+    """Physical-row axis of a PAGED cache leaf, None for non-row leaves.
+    Paged k/v are (n, R, hk, dh) stacked | (R, hk, dh) shared; scales
+    (n, R, hk) | (R, hk); latents (n, R, w) + (n, R). Recurrent leaves
+    keep their per-slot layout and are not row-pooled."""
+    if name in ("k", "v"):
+        return 1 if ndim == 4 else 0
+    if name in ("k_scale", "v_scale"):
+        return 1 if ndim == 3 else 0
+    if name in ("latent", "latent_scale"):
+        return 1
+    return None
+
+
+def _leaf_name(path) -> str:
+    return path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+
+
+def _paged_rows(block_table, widx, page: int, Tc: int, R: int):
+    """Translate logical write rows through the block table.
+
+    widx: (B|1, S) logical rows from decode_positions, with the
+    padded-token drop marker == Tc. Returns (B, S) PHYSICAL pool rows;
+    dropped writes map to R (out of range, killed by mode="drop"). The
+    lookup page is clamped to Tc - 1 first so the drop marker itself
+    cannot index past the block table when Tc is page-aligned."""
+    bt = block_table
+    B = bt.shape[0]
+    w = jnp.asarray(widx, jnp.int32)
+    if w.shape[0] == 1 and B > 1:
+        w = jnp.broadcast_to(w, (B,) + w.shape[1:])
+    lp = jnp.minimum(w, Tc - 1) // page
+    phys = jnp.take_along_axis(bt, lp, axis=1) * page + w % page
+    return jnp.where(w >= Tc, R, phys)
+
+
+def _gather_rows(block_table, page: int, Tb: int):
+    """(B, Tb) physical pool rows backing logical rows 0..Tb-1 of every
+    slot. The gather preserves logical row order, so a paged read slice
+    is bitwise-identical to the contiguous cache_k[:, :Tb] slice —
+    unassigned table entries alias page 0, whose rows are masked (or
+    write-dropped) exactly like unwritten contiguous rows."""
+    rows = jnp.arange(Tb, dtype=jnp.int32)
+    return block_table[:, rows // page] * page + rows % page
+
+
 def cache_pspecs(cfg: ModelConfig, caches, mesh) -> Any:
     """PartitionSpecs for the cache pytree: shard kv-heads over `model` when
     divisible, otherwise shard the long sequence axis over ("data","model")
@@ -182,6 +289,48 @@ def cache_pspecs(cfg: ModelConfig, caches, mesh) -> Any:
             if leaf.shape[1] % nb == 0:
                 return P(None, bax, "model")
             return P(None, None, ("data", "model"))
+        if name in ("wkv", "ssm"):                    # (n, B, H, ., .)
+            b_ok = leaf.shape[1] % nb == 0
+            h_ok = leaf.shape[2] % msize == 0
+            return P(None, bax if b_ok else None,
+                     "model" if h_ok else None, None, None)
+        if name in ("shift_tm", "shift_cm"):          # (n, B, d)
+            return P(None, bax if leaf.shape[1] % nb == 0 else None, None)
+        if name == "conv":                            # (n, B, Kw-1, Cc)
+            return P(None, bax if leaf.shape[1] % nb == 0 else None,
+                     None, "model" if leaf.shape[3] % msize == 0 else None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches)
+
+
+def paged_cache_pspecs(cfg: ModelConfig, caches, mesh) -> Any:
+    """PartitionSpecs for PAGED caches (init_paged_cache shapes — a
+    separate function because paged stacked k/v is 4-D, colliding with
+    the contiguous shared-block k/v rule in cache_pspecs). Row-pooled
+    leaves have no batch axis and their rows are gathered through the
+    block table (row-random), so the pool row axis stays unsharded and
+    kv-heads shard over `model` when divisible. Recurrent leaves keep
+    the contiguous per-slot rules."""
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    nb = _nb(mesh)
+    bax = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        ax = _paged_row_axis(name, leaf.ndim)
+        if ax is not None:
+            lead = (None,) * (ax + 1)                 # stack axis + rows
+            if name in ("k", "v"):
+                hk = leaf.shape[ax + 1]
+                return P(*lead, "model" if hk % msize == 0 else None,
+                         None)
+            if name in ("k_scale", "v_scale"):
+                hk = leaf.shape[ax + 1]
+                return P(*lead, "model" if hk % msize == 0 else None)
+            if name == "latent":                      # (n, R, w)
+                return P(None, None, None)
+            return P(None, None)                      # latent_scale
         if name in ("wkv", "ssm"):                    # (n, B, H, ., .)
             b_ok = leaf.shape[1] % nb == 0
             h_ok = leaf.shape[2] % msize == 0
@@ -325,7 +474,7 @@ def _decode_ffn(p_l, cfg, x):
 
 def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
                 pinfo=None, n_valid=None, kv_len=None, use_ragged=False,
-                cache_ks=None, cache_vs=None):
+                cache_ks=None, cache_vs=None, paged=None):
     """Single-step attention using + updating the cache slice.
 
     x: (B, S, d) — S is 1 for decode ticks, the chunk size during chunked
@@ -338,9 +487,22 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
     cache_ks/cache_vs: (B, T, Hk) f32 scale caches when kv_cache_dtype is
     quantized — k_new/v_new are quantized as they land (per-head,
     per-position amax scales), codes and scales share `widx` so ring
-    wraparound and padded-token drops stay in lockstep. Returns the new
-    caches as a dict."""
-    T = cache_k.shape[1]
+    wraparound and padded-token drops stay in lockstep.
+
+    paged: optional (block_table, page, Tc) — caches are then ROW POOLS
+    ((R, Hk, Dh) / (R, Hk) scales, no batch axis) addressed through the
+    per-slot block table: `widx` translates to physical rows for writes
+    (codes + scales share the translated rows, so page lockstep is
+    automatic) and reads gather logical rows 0..Tb-1 in order, making
+    paged attention bitwise-identical to the contiguous slice. S=1
+    ragged decode skips the gather entirely: the Pallas kernel indexes
+    KV pages through the block table itself. Returns the new caches as
+    a dict."""
+    if paged is not None:
+        block_table, page, T = paged
+        R = cache_k.shape[0]
+    else:
+        T = cache_k.shape[1]
     # windows are static Segment.window ints; a traced window must fail
     # loudly here — silently treating it as full attention would write
     # past a ring-sized cache.
@@ -360,10 +522,17 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
     # keys] below. S=1 decode ticks keep the write-then-read fast path.
     chunk_ring = ring and S > 1
     if chunk_ring:
-        pre_k = cache_k[:, :Tb]
-        pre_v = cache_v[:, :Tb]
-        pre_scales = ((cache_ks[:, :Tb], cache_vs[:, :Tb])
-                      if spec.quantized else None)
+        if paged is not None:
+            grows = _gather_rows(block_table, page, Tb)    # (B, Tb)
+            pre_k = cache_k[grows]
+            pre_v = cache_v[grows]
+            pre_scales = ((cache_ks[grows], cache_vs[grows])
+                          if spec.quantized else None)
+        else:
+            pre_k = cache_k[:, :Tb]
+            pre_v = cache_v[:, :Tb]
+            pre_scales = ((cache_ks[:, :Tb], cache_vs[:, :Tb])
+                          if spec.quantized else None)
     h = L.rms_norm(x, p_l["ln_attn"], cfg.logical_norm_eps)
     # project current token k, v and write to cache
     src = h
@@ -377,10 +546,25 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
         # quantize-on-write: post-RoPE keys/values -> codes + scales
         k_new, ks_new = quant.quantize(k_new, spec)    # (B,S,Hk,dh),(B,S,Hk)
         v_new, vs_new = quant.quantize(v_new, spec)
-        cache_ks = _update_at(cache_ks, ks_new, widx)
-        cache_vs = _update_at(cache_vs, vs_new, widx)
-    cache_k = _update_at(cache_k, k_new, widx)
-    cache_v = _update_at(cache_v, v_new, widx)
+    if paged is not None:
+        # codes and scales land at the SAME translated physical rows:
+        # quantized lockstep holds per page by construction
+        rows = _paged_rows(block_table, widx, page, T, R)
+        if spec.quantized:
+            cache_ks = cache_ks.at[rows].set(
+                ks_new.astype(cache_ks.dtype), mode="drop")
+            cache_vs = cache_vs.at[rows].set(
+                vs_new.astype(cache_vs.dtype), mode="drop")
+        cache_k = cache_k.at[rows].set(
+            k_new.astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[rows].set(
+            v_new.astype(cache_v.dtype), mode="drop")
+    else:
+        if spec.quantized:
+            cache_ks = _update_at(cache_ks, ks_new, widx)
+            cache_vs = _update_at(cache_vs, vs_new, widx)
+        cache_k = _update_at(cache_k, k_new, widx)
+        cache_v = _update_at(cache_v, v_new, widx)
     if chunk_ring:
         # pre-chunk key positions at depth pos (last written pos-1);
         # never-written rows go past every chunk query (pos + S). Fresh
@@ -410,20 +594,43 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
         a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
                                  q_pos=q_pos, k_pos=kp, kv=(kcat, vcat))
     else:
-        # read slice: O(bucket) bytes, not O(T) — rows past the kv-len
-        # bucket are allocated-but-unwritten (masked anyway), never read
-        kr = cache_k[:, :Tb] if Tb < T else cache_k
-        vr = cache_v[:, :Tb] if Tb < T else cache_v
-        kv_scales = None
-        if spec.quantized:
-            kv_scales = (cache_ks[:, :Tb] if Tb < T else cache_ks,
-                         cache_vs[:, :Tb] if Tb < T else cache_vs)
         lengths = jnp.broadcast_to(pinfo["lengths"], (x.shape[0],)) \
             if use_ragged else None
-        a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
-                                 q_pos=q_pos, k_pos=k_pos,
-                                 kv=(kr, vr), ragged_lengths=lengths,
-                                 kv_scales=kv_scales)
+        if paged is not None and use_ragged and S == 1:
+            # the paged ragged kernel gathers KV pages through the block
+            # table in its own index map — no row gather materializes
+            kv_scales = (cache_ks, cache_vs) if spec.quantized else None
+            a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
+                                     q_pos=q_pos, k_pos=k_pos,
+                                     kv=(cache_k, cache_v),
+                                     ragged_lengths=lengths,
+                                     kv_scales=kv_scales,
+                                     paged_kv=(block_table, page, Tb))
+        elif paged is not None:
+            # dense fallback: gather logical rows 0..Tb-1 in order —
+            # bitwise-identical to the contiguous read slice
+            grows = _gather_rows(block_table, page, Tb)
+            kr, vr = cache_k[grows], cache_v[grows]
+            kv_scales = ((cache_ks[grows], cache_vs[grows])
+                         if spec.quantized else None)
+            a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
+                                     q_pos=q_pos, k_pos=k_pos,
+                                     kv=(kr, vr), ragged_lengths=lengths,
+                                     kv_scales=kv_scales)
+        else:
+            # read slice: O(bucket) bytes, not O(T) — rows past the
+            # kv-len bucket are allocated-but-unwritten (masked anyway),
+            # never read
+            kr = cache_k[:, :Tb] if Tb < T else cache_k
+            vr = cache_v[:, :Tb] if Tb < T else cache_v
+            kv_scales = None
+            if spec.quantized:
+                kv_scales = (cache_ks[:, :Tb] if Tb < T else cache_ks,
+                             cache_vs[:, :Tb] if Tb < T else cache_vs)
+            a, _ = L.attention_block(p_l["attn"], cfg, h, window=window,
+                                     q_pos=q_pos, k_pos=k_pos,
+                                     kv=(kr, vr), ragged_lengths=lengths,
+                                     kv_scales=kv_scales)
     x = x + a
     if cross is not None:
         cp, ck, cv = cross
@@ -441,15 +648,21 @@ def decode_attn(p_l, cfg, x, cache_k, cache_v, pos, window, cross=None,
 
 
 def decode_mla(p_l, cfg, x, cache_lat, pos, pinfo=None, n_valid=None,
-               kv_len=None, cache_lat_s=None):
+               kv_len=None, cache_lat_s=None, paged=None):
     """pos: scalar or per-slot (B,). MLA caches are always linear (full
     attention); the latent read is bucket-sliced like the k/v caches.
     Quantized mode stores latent codes + a per-position scale (the latent
     is head-free, so one scale per cached row); the absorbed-matrix
     attention consumes the densely-dequantized slice (no MLA Pallas
-    kernel — the dequant IS the reference path). Returns (out, cache
-    dict)."""
-    T = cache_lat.shape[1]
+    kernel — the dequant IS the reference path). paged: optional
+    (block_table, page, Tc) — latents pool their rows exactly like the
+    k/v caches (decode_attn), codes + scales on the same physical rows.
+    Returns (out, cache dict)."""
+    if paged is not None:
+        block_table, page, T = paged
+        R = cache_lat.shape[0]
+    else:
+        T = cache_lat.shape[1]
     spec = kv_quant_spec(cfg)
     if pinfo is None:
         pinfo = decode_positions(pos, x.shape[1], T, False, n_valid=n_valid,
@@ -459,12 +672,25 @@ def decode_mla(p_l, cfg, x, cache_lat, pos, pinfo=None, n_valid=None,
     lat_new = L.mla_latent(p_l["attn"], cfg, h, k_pos=q_pos)  # (B,S,w)
     if spec.quantized:
         lat_new, ls_new = quant.quantize(lat_new, spec)       # scale (B,S)
-        cache_lat_s = _update_at(cache_lat_s, ls_new, widx)
-    cache_lat = _update_at(cache_lat, lat_new, widx)
-    latr = cache_lat[:, :Tb] if Tb < T else cache_lat
-    if spec.quantized:
-        lsr = cache_lat_s[:, :Tb] if Tb < T else cache_lat_s
-        latr = quant.dequantize(latr, lsr, x.dtype)
+    if paged is not None:
+        rows = _paged_rows(block_table, widx, page, T, R)
+        if spec.quantized:
+            cache_lat_s = cache_lat_s.at[rows].set(
+                ls_new.astype(cache_lat_s.dtype), mode="drop")
+        cache_lat = cache_lat.at[rows].set(
+            lat_new.astype(cache_lat.dtype), mode="drop")
+        grows = _gather_rows(block_table, page, Tb)
+        latr = cache_lat[grows]
+        if spec.quantized:
+            latr = quant.dequantize(latr, cache_lat_s[grows], x.dtype)
+    else:
+        if spec.quantized:
+            cache_lat_s = _update_at(cache_lat_s, ls_new, widx)
+        cache_lat = _update_at(cache_lat, lat_new, widx)
+        latr = cache_lat[:, :Tb] if Tb < T else cache_lat
+        if spec.quantized:
+            lsr = cache_lat_s[:, :Tb] if Tb < T else cache_lat_s
+            latr = quant.dequantize(latr, lsr, x.dtype)
     a = L.mla_attention(p_l["attn"], cfg, h, latr, q_pos=q_pos,
                         k_pos=pinfo["k_pos"])
     x = x + a
@@ -476,23 +702,41 @@ def decode_mla(p_l, cfg, x, cache_lat, pos, pinfo=None, n_valid=None,
 
 def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
                    *, mesh=None, cross_stack=None, n_valid=None,
-                   kv_len=None, use_ragged=False, use_fused=False):
+                   kv_len=None, use_ragged=False, use_fused=False,
+                   paged=None):
     """x: (B, S, [K,] d); returns (x, new cache). S > 1 only during
     chunked prefill (attention/MLA segments; padded tokens masked via
-    n_valid)."""
+    n_valid). paged: optional (block_table, page) — row-pooled caches
+    addressed through the per-slot table; the logical capacity Tc is the
+    table's row span (ring segments still cap it at their window), which
+    covers every reachable position since requests never exceed max_len
+    <= table capacity."""
     K = cfg.altup.K
     S = x.shape[1]
+    pg_seg = None
     # hoisted position construction (§Perf satellite): q_pos / k_pos /
     # write rows / ragged lengths are identical for every layer of the
     # segment, so build them once HERE — outside the scanned layer body —
     # instead of re-deriving the (S, T) position grids per layer per step.
     if seg.kind in ("attn", "shared_attn"):
-        Tc = (cache["k"].shape[1] if seg.kind == "shared_attn"
-              else cache["k"].shape[2])
+        if paged is not None:
+            bt, pg = paged
+            T_pg = bt.shape[1] * pg
+            Tc = min(T_pg, int(seg.window)) if int(seg.window) > 0 \
+                else T_pg
+            pg_seg = (bt, pg, Tc)
+        else:
+            Tc = (cache["k"].shape[1] if seg.kind == "shared_attn"
+                  else cache["k"].shape[2])
         pinfo = decode_positions(pos, S, Tc, int(seg.window) > 0,
                                  n_valid=n_valid, kv_len=kv_len)
     elif seg.kind == "mla":
-        Tc = cache["latent"].shape[2]
+        if paged is not None:
+            bt, pg = paged
+            Tc = bt.shape[1] * pg
+            pg_seg = (bt, pg, Tc)
+        else:
+            Tc = cache["latent"].shape[2]
         pinfo = decode_positions(pos, S, Tc, False, n_valid=n_valid,
                                  kv_len=kv_len)
     else:
@@ -504,7 +748,8 @@ def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
                                   pos, seg.window, pinfo=pinfo,
                                   use_ragged=use_ragged,
                                   cache_ks=cache.get("k_scale"),
-                                  cache_vs=cache.get("v_scale"))
+                                  cache_vs=cache.get("v_scale"),
+                                  paged=pg_seg)
             layer_fn.new_cache = nc
             return out
         if cfg.altup.enabled:
@@ -536,12 +781,14 @@ def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
                                       cross=cross, pinfo=pinfo,
                                       use_ragged=use_ragged,
                                       cache_ks=cache_l.get("k_scale"),
-                                      cache_vs=cache_l.get("v_scale"))
+                                      cache_vs=cache_l.get("v_scale"),
+                                      paged=pg_seg)
                 box["cache"] = nc
             elif seg.kind == "mla":
                 out, nc = decode_mla(p_l, cfg, xa, cache_l["latent"], pos,
                                      pinfo=pinfo,
-                                     cache_lat_s=cache_l.get("latent_scale"))
+                                     cache_lat_s=cache_l.get("latent_scale"),
+                                     paged=pg_seg)
                 box["cache"] = nc
             elif seg.kind == "rwkv":
                 state = {"wkv": cache_l["wkv"],
@@ -574,7 +821,8 @@ def decode_segment(p_seg, cache, seg: Segment, cfg: ModelConfig, x, pos,
 
 
 def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
-                n_valid=None, kv_len=None, mesh=None):
+                n_valid=None, kv_len=None, mesh=None, block_table=None,
+                page_size=0):
     """serve_step: advance every sequence by its next token(s).
 
     tokens: (B, S) int32 — S is 1 for decode ticks; chunked prefill feeds
@@ -585,10 +833,19 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
     padded tokens neither write the cache nor produce usable logits.
     kv_len: optional STATIC read-slice bucket (host-computed power-of-two
     >= max fill depth): attention reads O(kv_len) cache rows, not O(T).
-    Returns (logits (B, S, V), new caches); sampling reads row
-    n_valid-1 per slot.
+    block_table/page_size: PAGED mode — caches are init_paged_cache row
+    pools and block_table is the (B, ceil(max_len/page)) int32 per-slot
+    page map (page_size is static). Returns (logits (B, S, V), new
+    caches); sampling reads row n_valid-1 per slot.
     """
     from repro.kernels import resolve_kernel_flag
+    paged = None
+    if block_table is not None:
+        assert int(page_size) >= 1, "paged decode needs a page_size"
+        assert cfg.family != "encdec", "paged decode is decoder-only"
+        assert jnp.asarray(pos).ndim == 1, \
+            "paged decode needs per-slot (B,) positions"
+        paged = (block_table, int(page_size))
     use_ragged = resolve_kernel_flag(cfg.ragged_decode_attn)
     use_fused = cfg.altup.enabled and \
         resolve_kernel_flag(cfg.fused_decode_altup)
@@ -606,7 +863,7 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
                                cfg, x, pos, mesh=mesh,
                                cross_stack=cross_stack, n_valid=n_valid,
                                kv_len=kv_len, use_ragged=use_ragged,
-                               use_fused=use_fused)
+                               use_fused=use_fused, paged=paged)
         new_caches[f"seg{si}"] = nc
     logits = unembed(params, cfg, x, mesh=mesh)
     return logits, new_caches
@@ -614,7 +871,8 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, *,
 
 def decode_sample_step(params, caches, seen, tokens, pos, n_valid, sparams,
                        *, cfg: ModelConfig, kv_len=None, want_logprobs=False,
-                       any_sampled=True, mesh=None):
+                       any_sampled=True, mesh=None, block_table=None,
+                       page_size=0):
     """Fused decode + ON-DEVICE sampling — the serving hot path's step.
 
     Runs decode_step, gathers each slot's sampled logits row (row
@@ -632,7 +890,9 @@ def decode_sample_step(params, caches, seen, tokens, pos, n_valid, sparams,
     new caches, new seen)."""
     from repro.serve.sampling import sample_rows, update_seen
     logits, caches = decode_step(params, cfg, caches, tokens, pos,
-                                 n_valid=n_valid, kv_len=kv_len, mesh=mesh)
+                                 n_valid=n_valid, kv_len=kv_len, mesh=mesh,
+                                 block_table=block_table,
+                                 page_size=page_size)
     B = tokens.shape[0]
     rows = logits[jnp.arange(B), jnp.maximum(n_valid - 1, 0),
                   :cfg.vocab_size]
@@ -655,7 +915,8 @@ def _tree_merge(old, new, m: int):
 
 
 def draft_step(params, cfg: ModelConfig, caches, tokens, pos, *,
-               draft_layers: int, n_valid=None, kv_len=None, mesh=None):
+               draft_layers: int, n_valid=None, kv_len=None, mesh=None,
+               block_table=None, page_size=0):
     """Predict-only / early-exit DRAFT forward for self-speculative
     decoding (serve/speculative.py).
 
@@ -679,6 +940,8 @@ def draft_step(params, cfg: ModelConfig, caches, tokens, pos, *,
     assert cfg.family != "encdec", "draft_step serves decoder-only models"
     D = int(draft_layers)
     assert 1 <= D <= cfg.n_layers, f"draft_layers={D} out of range"
+    paged = (block_table, int(page_size)) if block_table is not None \
+        else None
     use_ragged = resolve_kernel_flag(cfg.ragged_decode_attn)
     use_fused = cfg.altup.enabled and \
         resolve_kernel_flag(cfg.fused_decode_altup)
@@ -695,7 +958,7 @@ def draft_step(params, cfg: ModelConfig, caches, tokens, pos, *,
             x, nc = decode_segment(p_seg, cache, seg, cfg, x, pos,
                                    mesh=mesh, n_valid=n_valid,
                                    kv_len=kv_len, use_ragged=use_ragged,
-                                   use_fused=use_fused)
+                                   use_fused=use_fused, paged=paged)
             new_caches[f"seg{si}"] = nc
             continue
         if m > 0:
@@ -707,7 +970,7 @@ def draft_step(params, cfg: ModelConfig, caches, tokens, pos, *,
                                    head, cfg, x, pos, mesh=mesh,
                                    n_valid=n_valid, kv_len=kv_len,
                                    use_ragged=use_ragged,
-                                   use_fused=use_fused)
+                                   use_fused=use_fused, paged=paged)
             new_caches[f"seg{si}"] = _tree_merge(cache, nc, m)
         if cfg.altup.enabled:
             # predict-only tail: layers [m, n) collapse to ONE composed
@@ -789,16 +1052,21 @@ def copy_prefix(caches, dst, src, p, *, copy_recurrent=False):
     return jax.tree_util.tree_map_with_path(copy, caches)
 
 
-def reset_slot(caches, slot):
+def reset_slot(caches, slot, *, only_recurrent=False):
     """Zero one slot's recurrent state (rwkv/mamba) and any quantized-
     cache scale leaves across all segments.
 
     slot: scalar int32 (traced OK — jit this with donated caches). Attn
     and MLA code/float caches are left untouched; per-slot position
-    masking makes their stale rows unreachable."""
+    masking makes their stale rows unreachable. only_recurrent=True
+    (PAGED caches) skips the scale leaves: paged scale leaves are row
+    pools with no batch axis — freshly-allocated pages are zeroed by
+    reset_pages instead."""
 
     def reset(path, leaf):
         name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if only_recurrent and name in _SCALE_LEAVES:
+            return leaf
         if name in _RECURRENT_LEAVES:
             # all recurrent leaves are stacked (n, B, ...): batch axis 1
             return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, slot]))
@@ -817,6 +1085,107 @@ def reset_slot(caches, slot):
 
 
 # --------------------------------------------------------------------------
+# page-granular cache ops (serve/paging.py drives these, jitted, on the
+# init_paged_cache row pools)
+# --------------------------------------------------------------------------
+# All four take fixed-width (K,) int32 page-id vectors padded with -1 so
+# ONE compilation covers every page count up to K: padded destination
+# pages remap to the out-of-range row block [R, R+page) and the scatter
+# drops them; padded source pages clamp to page 0 and gather unused
+# garbage. Only row-pooled leaves participate (_paged_row_axis);
+# recurrent per-slot state keeps the slot-granular copy/reset helpers.
+
+
+def _page_rows(pages, page: int, *, pad_to):
+    """(K,) page ids -> (K * page,) row ids; padded (< 0) entries map to
+    the page starting at row `pad_to` (pass R to drop, 0 to clamp)."""
+    pages = jnp.asarray(pages, jnp.int32)
+    base = jnp.where(pages >= 0, pages * page, pad_to)
+    offs = jnp.arange(page, dtype=jnp.int32)[None]
+    return (base[:, None] + offs).reshape(-1)
+
+
+def copy_pages(caches, dst_pages, src_pages, *, page: int):
+    """Clone whole physical pages src -> dst across every row-pooled
+    leaf — codes AND scales in lockstep, ring/latent pools included.
+    The jitted page-copy behind partial-boundary-page prefix hits and
+    ring-plan prefix clones (aliased full pages never copy)."""
+
+    def copy(path, leaf):
+        ax = _paged_row_axis(_leaf_name(path), leaf.ndim)
+        if ax is None:
+            return leaf
+        R = leaf.shape[ax]
+        src_rows = _page_rows(src_pages, page, pad_to=0)
+        dst_rows = _page_rows(dst_pages, page, pad_to=R)
+        vals = jnp.take(leaf, src_rows, axis=ax)
+        if ax == 1:
+            return leaf.at[:, dst_rows].set(vals, mode="drop")
+        return leaf.at[dst_rows].set(vals, mode="drop")
+
+    return jax.tree_util.tree_map_with_path(copy, caches)
+
+
+def gather_pages(caches, pages, *, page: int):
+    """Gather the given pages of every row-pooled leaf into a compact
+    blob pytree (page i of the blob == pages[i]; padded entries gather
+    page 0, ignored on restore). The device half of a host-tier spill —
+    the engine np.asarray()s the result before releasing the pages."""
+
+    def gather(path, leaf):
+        ax = _paged_row_axis(_leaf_name(path), leaf.ndim)
+        if ax is None:
+            return jnp.zeros((0,), leaf.dtype)        # not spilled
+        rows = _page_rows(pages, page, pad_to=0)
+        return jnp.take(leaf, rows, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(gather, caches)
+
+
+def scatter_pages(caches, blob, pages, *, page: int):
+    """Scatter a gather_pages blob back into the given pages (padded
+    entries dropped) — the restore half of the host spill tier."""
+
+    def scatter(path, leaf_and_blob):
+        leaf, bl = leaf_and_blob
+        ax = _paged_row_axis(_leaf_name(path), leaf.ndim)
+        if ax is None:
+            return leaf
+        R = leaf.shape[ax]
+        rows = _page_rows(pages, page, pad_to=R)
+        if ax == 1:
+            return leaf.at[:, rows].set(bl.astype(leaf.dtype), mode="drop")
+        return leaf.at[rows].set(bl.astype(leaf.dtype), mode="drop")
+
+    merged = jax.tree_util.tree_map(lambda a, b: (a, b), caches, blob)
+    return jax.tree_util.tree_map_with_path(
+        scatter, merged, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def reset_pages(caches, pages, *, page: int):
+    """Zero the quantized scale rows of freshly-allocated pages. The
+    paged counterpart of reset_slot's scale sweep: a recycled page's
+    stale VALUE rows may hold NaN/Inf from an aborted request, and the
+    dense fallback multiplies values by scales before masking — scale 0
+    makes every stale row dequantize to exact 0 so nothing can poison
+    the softmax through 0 * NaN. Aliased (shared) pages are never
+    reset — they carry the donor's live scales."""
+
+    def reset(path, leaf):
+        name = _leaf_name(path)
+        if name not in _SCALE_LEAVES:
+            return leaf
+        ax = _paged_row_axis(name, leaf.ndim)
+        R = leaf.shape[ax]
+        rows = _page_rows(pages, page, pad_to=R)
+        if ax == 1:
+            return leaf.at[:, rows].set(0.0, mode="drop")
+        return leaf.at[rows].set(0.0, mode="drop")
+
+    return jax.tree_util.tree_map_with_path(reset, caches)
+
+
+# --------------------------------------------------------------------------
 # speculative-decoding cache rollback (serve/speculative.py)
 # --------------------------------------------------------------------------
 # Linear (full-attention) k/v and MLA latent caches need NO restore on a
@@ -830,11 +1199,11 @@ def reset_slot(caches, slot):
 
 
 def _ring_segs(cfg: ModelConfig):
-    """(seg_name, stacked?) for every ring-cache segment of the plan."""
+    """(seg_name, stacked?, window) for every ring-cache segment."""
     out = []
     for si, seg in enumerate(layer_plan(cfg)):
         if seg.kind in ("attn", "shared_attn") and seg.window > 0:
-            out.append((f"seg{si}", seg.kind == "attn"))
+            out.append((f"seg{si}", seg.kind == "attn", int(seg.window)))
     return out
 
 
@@ -846,31 +1215,50 @@ def _ring_rows(leaf, stacked: bool, pos, S: int):
     return (p[:, None] + jnp.arange(S, dtype=jnp.int32)[None]) % Tc
 
 
-def snapshot_rows(cfg: ModelConfig, caches, pos, S: int):
+def _ring_rows_paged(block_table, page: int, window: int, pos, S: int):
+    """Paged form of _ring_rows: the (B, S) PHYSICAL pool rows that ring
+    positions pos..pos+S-1 occupy, through the block table. The logical
+    ring capacity matches decode_segment: min(table span, window)."""
+    Tc = min(block_table.shape[1] * page, window)
+    B = block_table.shape[0]
+    p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    logical = (p[:, None] + jnp.arange(S, dtype=jnp.int32)[None]) % Tc
+    phys = jnp.take_along_axis(block_table, logical // page, axis=1)
+    return phys * page + logical % page
+
+
+def snapshot_rows(cfg: ModelConfig, caches, pos, S: int, *,
+                  block_table=None, page: int = 0):
     """Capture the ring-cache rows (codes AND quantized scales, in
     lockstep) that speculative positions pos..pos+S-1 will overwrite.
     Returns {seg_name: {leaf: (n, B, S, ...) | (B, S, ...)}} — empty for
     plans with no ring segment. S must not exceed the smallest ring
     window (the engine caps the draft length so one round never wraps a
-    row onto itself)."""
+    row onto itself). block_table/page: PAGED pools — rows translate
+    through the table, snapshot shapes are identical to contiguous."""
     snap = {}
-    for name, stacked in _ring_segs(cfg):
+    for name, stacked, window in _ring_segs(cfg):
         c = caches[name]
         entry = {}
         for leaf_name in ("k", "v", "k_scale", "v_scale"):
             if leaf_name not in c:
                 continue
             leaf = c[leaf_name]
-            rows = _ring_rows(leaf, stacked, pos, S)
-            B = rows.shape[0]
-            bidx = jnp.arange(B)[:, None]
-            entry[leaf_name] = (leaf[:, bidx, rows] if stacked
-                                else leaf[bidx, rows])
+            if block_table is not None:
+                rows = _ring_rows_paged(block_table, page, window, pos, S)
+                entry[leaf_name] = (leaf[:, rows] if stacked
+                                    else leaf[rows])
+            else:
+                rows = _ring_rows(leaf, stacked, pos, S)
+                bidx = jnp.arange(rows.shape[0])[:, None]
+                entry[leaf_name] = (leaf[:, bidx, rows] if stacked
+                                    else leaf[bidx, rows])
         snap[name] = entry
     return snap
 
 
-def restore_rows(cfg: ModelConfig, caches, snap, pos, start, S: int):
+def restore_rows(cfg: ModelConfig, caches, snap, pos, start, S: int, *,
+                 block_table=None, page: int = 0):
     """Scatter snapshot rows back: slot b restores rows start_b..S-1
     (start is scalar or (B,)). start=0 undoes a whole round's ring
     writes (pre-verify: the draft's ring writes must not shadow the
@@ -879,10 +1267,24 @@ def restore_rows(cfg: ModelConfig, caches, snap, pos, start, S: int):
     start >= S restores nothing for that slot."""
     new_caches = dict(caches)
     offs = jnp.arange(S, dtype=jnp.int32)[None]
-    for name, stacked in _ring_segs(cfg):
+    for name, stacked, window in _ring_segs(cfg):
         c = dict(caches[name])
         for leaf_name, snap_leaf in snap[name].items():
             leaf = c[leaf_name]
+            if block_table is not None:
+                ax = _paged_row_axis(leaf_name, leaf.ndim)
+                R = leaf.shape[ax]
+                rows = _ring_rows_paged(block_table, page, window, pos, S)
+                st = jnp.broadcast_to(jnp.asarray(start, jnp.int32),
+                                      (rows.shape[0],))
+                rows = jnp.where(offs >= st[:, None], rows, R)
+                if stacked:
+                    c[leaf_name] = leaf.at[:, rows].set(
+                        snap_leaf, mode="drop")
+                else:
+                    c[leaf_name] = leaf.at[rows].set(
+                        snap_leaf, mode="drop")
+                continue
             Tc = leaf.shape[2 if stacked else 1]
             rows = _ring_rows(leaf, stacked, pos, S)
             B = rows.shape[0]

@@ -169,7 +169,8 @@ def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
                     x_kv: Optional[jax.Array] = None, bias=None,
                     causal: Optional[bool] = None, banded: bool = False,
                     ragged_lengths: Optional[jax.Array] = None,
-                    kv_scales: Optional[tuple] = None):
+                    kv_scales: Optional[tuple] = None,
+                    paged_kv: Optional[tuple] = None):
     """Full attention sub-block (no residual, no pre-norm — caller owns those).
 
     Returns (out, (k, v)) so callers can populate KV caches.
@@ -185,6 +186,11 @@ def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
     dequant into its kv-block load; every other path (chunked prefill
     S > 1, dense fallback on interpret backends) dequantizes here and is
     the kernel's oracle.
+    paged_kv: (block_table, page, t_max) — `kv` is then a batchless page
+    POOL ((R, Hk, Dh), scales (R, Hk)) and attention must take the ragged
+    kernel path (paged pools have no dense layout for sdpa); the kernel
+    indexes KV pages through the block table in its own index map, so no
+    gathered copy of the cache is materialized.
     """
     dh = cfg.resolved_head_dim
     causal = cfg.causal if causal is None else causal
@@ -212,12 +218,23 @@ def attention_block(p: dict, cfg: ModelConfig, x: jax.Array, *,
                   and x_kv is None)
     if use_ragged:
         from repro.kernels import ops as kops
-        if kv_scales is not None:
+        if paged_kv is not None:
+            bt, page, t_max = paged_kv
+            ks, vs = kv_scales if kv_scales is not None else (None, None)
+            out = kops.paged_ragged_decode_attn(q, k, v, ragged_lengths,
+                                                bt, ks, vs, page=page,
+                                                t_max=t_max)
+        elif kv_scales is not None:
             out = kops.ragged_decode_attn(q, k, v, ragged_lengths,
                                           kv_scales[0], kv_scales[1])
         else:
             out = kops.ragged_decode_attn(q, k, v, ragged_lengths)
     else:
+        if paged_kv is not None:
+            raise ValueError(
+                "paged_kv requires the ragged decode path (S == 1, kv "
+                "cache, causal, no bias) — a paged pool has no dense "
+                "(B, T, ...) layout for sdpa")
         if kv_scales is not None:
             from repro.kernels import quant
             k = quant.dequantize(k, kv_scales[0], x.dtype)

@@ -223,6 +223,61 @@ def decode_kv_bytes(cfg, lengths, *, T: int, dtype_bytes: int = 2,
     return total
 
 
+def paged_gather_bytes(cfg, lengths, *, page: int, T: int,
+                       kv_dtype: Optional[str] = None,
+                       dtype_bytes: int = 2) -> Dict[str, float]:
+    """Per-step byte model of the PAGED decode read (block-table gather).
+
+    The paged kernel reads whole pages: a slot at depth len_b touches
+    ceil(min(len_b, cap) / page) pages per kv leaf, so relative to the
+    ragged contiguous read its cache traffic rounds every slot's depth UP
+    to a page multiple — at most (page - 1) extra rows per slot per leaf,
+    vanishing as depths grow. On top of the row bytes, each step streams
+    the block table itself (4 bytes per (slot, logical-page) entry) and
+    the kernel's scalar-prefetch lengths — the price of indirection, tiny
+    next to one cache row.
+
+    Returns {"kv_bytes": page-rounded row read, "table_bytes": block
+    table + lengths, "total": sum, "overhead_frac": total relative to the
+    exact ragged read (decode_kv_bytes)}.
+    """
+    from repro.models.transformer import layer_plan  # lazy: no cycle
+    scale_b = 0
+    if kv_dtype is not None:
+        kd = resolve_kv_dtype_name(cfg) if kv_dtype == "auto" else kv_dtype
+        dtype_bytes = KV_DTYPE_BYTES[kd]
+        scale_b = SCALE_BYTES if kd in _QUANTIZED_KV else 0
+    lengths = [int(x) for x in lengths]
+    B = len(lengths)
+    hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    npages_max = -(-T // page)
+    kv_total = 0.0
+    for seg in layer_plan(cfg):
+        if seg.kind in ("attn", "shared_attn"):
+            row = 2 * hk * (dh * dtype_bytes + scale_b)
+            cap = min(T, seg.window) if seg.window > 0 else T
+        elif seg.kind == "mla":
+            row = (cfg.mla.kv_lora_rank
+                   + cfg.mla.qk_rope_head_dim) * dtype_bytes + scale_b
+        else:                                             # recurrent: O(1)
+            continue
+        if seg.kind == "mla":
+            cap = T
+        n = seg.n if seg.kind != "shared_attn" else 1
+        rows = sum(-(-min(ln, cap) // page) * page for ln in lengths)
+        kv_total += n * rows * row
+    table = 4.0 * B * npages_max + 4.0 * B        # int32 table + lengths
+    exact = decode_kv_bytes(cfg, lengths, T=T, dtype_bytes=dtype_bytes,
+                            kv_dtype=kv_dtype)
+    total = kv_total + table
+    return {
+        "kv_bytes": kv_total,
+        "table_bytes": table,
+        "total": total,
+        "overhead_frac": total / exact if exact > 0 else 0.0,
+    }
+
+
 def speculative_bytes(cfg, lengths, *, T: int, draft_layers: int,
                       k: int, accept_rate: float,
                       kv_dtype: Optional[str] = None,

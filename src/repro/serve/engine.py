@@ -68,10 +68,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models.decode import (copy_prefix, decode_sample_step,
-                                 decode_step, init_cache, kv_quant_spec,
-                                 prefill, reset_slot, restore_rows,
-                                 snapshot_rows)
+from repro.models.decode import (copy_pages, copy_prefix,
+                                 decode_sample_step, decode_step,
+                                 gather_pages, init_cache,
+                                 init_paged_cache, kv_quant_spec, prefill,
+                                 reset_pages, reset_slot, restore_rows,
+                                 scatter_pages, snapshot_rows)
 from repro.serve.sampling import (Completion, SamplingParams,
                                   base_key_data, blank_slot_params,
                                   fill_slot_params, key_data_of,
@@ -112,7 +114,10 @@ class Engine:
                  n_slots: int = 8, mesh=None, prefill_chunk: int = 8,
                  kv_buckets: bool = True, kv_bucket_min: int = 32,
                  prefix_cache: bool = True,
-                 speculative: Union[bool, SpecConfig] = False):
+                 speculative: Union[bool, SpecConfig] = False,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 host_spill_pages: int = 0):
         if kv_bucket_min < 1:
             raise ValueError(
                 f"kv_bucket_min must be >= 1, got {kv_bucket_min}")
@@ -123,6 +128,21 @@ class Engine:
         self._kv_bucket_min = kv_bucket_min
         self._prefix_cache = prefix_cache
         self._prefill_chunk = max(1, prefill_chunk)
+        # paged KV cache (serve/paging.py): the continuous-batching slot
+        # caches become a page pool + per-slot block tables. n_pages
+        # defaults to full contiguous capacity (n_slots full-length
+        # requests); size it SMALLER to over-commit slots against typical
+        # (shorter / prefix-shared) requests — admission reserves each
+        # request's worst-case ceil((prompt+max_new)/page) pages, so
+        # over-commit is safe, just admission-limited. host_spill_pages
+        # bounds the host spill tier for evicted prefix pages (0 = off).
+        # generate() (the static oracle) always runs contiguous.
+        if paged and page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self._paged = bool(paged)
+        self._page_size = int(page_size)
+        self._n_pages = n_pages
+        self._host_spill_pages = int(host_spill_pages)
         # self-speculative decoding (serve/speculative.py): True enables
         # it with defaults, a SpecConfig tunes it; recurrent plans fall
         # back to normal decode at _ensure_slots (state cannot rewind)
@@ -134,12 +154,17 @@ class Engine:
         self._spec = False          # resolved against the plan lazily
         self._step = jax.jit(partial(decode_step, cfg=cfg, mesh=mesh),
                              static_argnames=("kv_len",))
-        # continuous-batching state (allocated lazily on first submit)
+        # continuous-batching state (allocated lazily on first submit).
+        # Paged engines bake the static page size into the fused step;
+        # the block table rides in as a traced kwarg each call.
         self._fused = jax.jit(
-            partial(decode_sample_step, cfg=cfg, mesh=mesh),
+            partial(decode_sample_step, cfg=cfg, mesh=mesh,
+                    page_size=(self._page_size if self._paged else 0)),
             static_argnames=("kv_len", "want_logprobs", "any_sampled"),
             donate_argnums=(1, 2))
-        self._reset = jax.jit(reset_slot, donate_argnums=(0,))
+        self._reset = jax.jit(
+            partial(reset_slot, only_recurrent=self._paged),
+            donate_argnums=(0,))
         self._clear_seen = jax.jit(
             lambda s, slot: s.at[slot].set(False), donate_argnums=(0,))
         # generate()'s per-token sampling: the SAME sample_rows as the
@@ -162,17 +187,40 @@ class Engine:
         # arrived by slot-to-slot copy instead of being prefilled.
         # spec_* counters cover the speculative rounds: drafted/accepted
         # feed the accept rate, spec_k_sum / spec_rounds the mean k
+        # concurrency_peak: most slots active in any one step (the paged
+        # over-commit headline — can exceed the FULL-length request count
+        # the same pool would fit contiguously)
         self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
                       "prefill_s": 0.0, "decode_s": 0.0,
                       "prefix_hits": 0, "prefill_tokens_saved": 0,
                       "spec_rounds": 0, "spec_drafted": 0,
-                      "spec_accepted": 0, "spec_k_sum": 0}
+                      "spec_accepted": 0, "spec_k_sum": 0,
+                      "concurrency_peak": 0}
 
     def reset_stats(self) -> None:
         """Zero the prefill/decode counters (benchmarks call this after
         their warmup pass so compile time stays out of the split)."""
         for k in self.stats:
             self.stats[k] = type(self.stats[k])()
+
+    @property
+    def paged_stats(self) -> Optional[Dict[str, object]]:
+        """Page-pool counters (None unless paged=True): pool occupancy,
+        aliasing vs fresh page acquisitions, and the spill tier's
+        traffic. Lifetime counters — NOT reset by reset_stats (the pool
+        outlives benchmark warmup passes)."""
+        if not self._paged or self._sched is None:
+            return None
+        pool = self._pool
+        return {"page_size": pool.page, "n_pages": pool.n_pages,
+                "pages_in_use": pool.pages_in_use,
+                "pages_in_use_peak": pool.pages_in_use_peak,
+                "alias_acquisitions": pool.alias_acquisitions,
+                "fresh_acquisitions": pool.fresh_acquisitions,
+                "page_share_rate": pool.page_share_rate,
+                "spills": pool.spills, "restores": pool.restores,
+                "host_dropped": pool.host_dropped,
+                "host_pages_used": self._sched.host_pages_used}
 
     def _bucket(self, needed: int) -> int:
         """Each bucket value is one jit specialization — log2(max_len)
@@ -205,6 +253,35 @@ class Engine:
                 return 0
         return p
 
+    def _paged_usable_len(self, p: int, depth: int) -> int:
+        """Paged-mode prefix validity. Recurrent plans get no paged
+        prefix reuse at all: a retained entry owns only PAGES (its slot —
+        and the per-slot rwkv/mamba state leaves with it — was recycled
+        at retirement), so there is no state to copy even when depth ==
+        p. Ring windows keep the contiguous overwrite rule."""
+        if p <= 0 or self._has_recurrent:
+            return 0
+        for W in self._ring_caps:
+            if depth > max(p, W):
+                return 0
+        return p
+
+    def _pad_pages(self, pages) -> np.ndarray:
+        """Fixed-width page vector for the jitted page helpers: pad to
+        npages_max with -1 (dropped/ignored rows) so every copy/gather/
+        scatter/reset shares ONE compile regardless of page count."""
+        out = np.full((self._pool.npages_max,), -1, np.int32)
+        out[:len(pages)] = pages
+        return out
+
+    def _spill_entry(self, entry) -> "object":
+        """PagedScheduler spill_fn: gather a retained entry's pages into
+        a host numpy blob (device gather, then one sync transfer) BEFORE
+        the scheduler releases them."""
+        blob = self._gather_pages(self._caches,
+                                  jnp.asarray(self._pad_pages(entry.pages)))
+        return jax.tree_util.tree_map(np.asarray, blob)
+
     def _ensure_slots(self):
         if self._sched is not None:
             return
@@ -221,10 +298,40 @@ class Engine:
         self._ring_caps = [min(self.max_len, s.window) for s in plan
                            if s.kind in ("attn", "shared_attn")
                            and s.window > 0]
-        self._sched = SlotScheduler(
-            self.n_slots, self.max_len,
-            prefix_cache=self._prefix_cache,
-            prefix_usable_len=self._prefix_usable_len)
+        has_ring = any(s.kind in ("attn", "shared_attn") and s.window > 0
+                       for s in plan)
+        if self._paged:
+            from repro.serve.paging import PagePool, PagedScheduler
+            P = self._page_size
+            npages_max = -(-self.max_len // P)
+            n_pages = (self._n_pages if self._n_pages is not None
+                       else self.n_slots * npages_max)
+            self._pool = PagePool(n_pages, P, self.n_slots, self.max_len)
+            # page-granular jitted helpers; all take fixed-width padded
+            # page vectors (_pad_pages) -> one compile each. The gather
+            # is read-only (the caches survive a spill), the rest donate.
+            self._copy_pages = jax.jit(partial(copy_pages, page=P),
+                                       donate_argnums=(0,))
+            self._gather_pages = jax.jit(partial(gather_pages, page=P))
+            self._scatter_pages = jax.jit(partial(scatter_pages, page=P),
+                                          donate_argnums=(0,))
+            self._reset_pages = jax.jit(partial(reset_pages, page=P),
+                                        donate_argnums=(0,))
+            self._sched = PagedScheduler(
+                self.n_slots, self.max_len, pool=self._pool,
+                prefix_cache=self._prefix_cache,
+                prefix_usable_len=self._paged_usable_len,
+                # ring plans copy prefix pages instead of aliasing: a
+                # sharer's ring writes wrap back into low pages, which
+                # would corrupt the donor's shared rows
+                alias_ok=not has_ring,
+                spill_fn=self._spill_entry,
+                host_budget=self._host_spill_pages)
+        else:
+            self._sched = SlotScheduler(
+                self.n_slots, self.max_len,
+                prefix_cache=self._prefix_cache,
+                prefix_usable_len=self._prefix_usable_len)
         # slot-to-slot prefix copy (one specialization: dst/src/p traced)
         # and the seen-row seeding that replays the prefix ids into the
         # repetition-penalty table exactly as cold prefill would. The
@@ -241,11 +348,14 @@ class Engine:
             donate_argnums=(0,))
         # quantized caches also reset at admission: reset_slot zeroes the
         # slot's scale leaves so stale rows dequantize to exact 0 and a
-        # NaN/Inf scale from an aborted request cannot survive recycling
+        # NaN/Inf scale from an aborted request cannot survive recycling.
+        # Paged mode splits the sweep: reset_slot (only_recurrent baked)
+        # covers per-slot recurrent leaves, reset_pages zeroes the scale
+        # rows of each admission's FRESH pages (aliased pages keep the
+        # donor's live scales and must not be touched).
+        self._quantized = kv_quant_spec(self.cfg).quantized
         self._admit_reset = (self._has_recurrent
-                             or kv_quant_spec(self.cfg).quantized)
-        has_ring = any(s.kind in ("attn", "shared_attn") and s.window > 0
-                       for s in plan)
+                             or (self._quantized and not self._paged))
         # chunked prefill needs token-order-free cache writes: recurrent
         # state advances token-by-token, and ring writes of a whole chunk
         # overwrite keys earlier chunk tokens still need
@@ -264,33 +374,42 @@ class Engine:
                      else default_draft_layers(self.cfg))
                 self._spec_k = AdaptiveK(sc, k_cap)
                 self._spec_has_ring = bool(self._ring_caps)
+                pg = self._page_size if self._paged else 0
                 self._spec_draft = jax.jit(
                     partial(draft_round, cfg=self.cfg,
-                            draft_layers=D, mesh=self.mesh),
+                            draft_layers=D, page_size=pg, mesh=self.mesh),
                     static_argnames=("k", "kv_len", "any_sampled"),
                     donate_argnums=(1,))
                 self._spec_verify = jax.jit(
                     partial(spec_verify_step, cfg=self.cfg,
-                            mesh=self.mesh),
+                            page_size=pg, mesh=self.mesh),
                     static_argnames=("kv_len", "want_logprobs",
                                      "any_sampled"),
                     donate_argnums=(1, 2))
                 self._spec_snap = jax.jit(
-                    partial(snapshot_rows, self.cfg),
+                    partial(snapshot_rows, self.cfg, page=pg),
                     static_argnames=("S",))
                 self._spec_restore = jax.jit(
-                    partial(restore_rows, self.cfg),
+                    partial(restore_rows, self.cfg, page=pg),
                     static_argnames=("S",), donate_argnums=(0,))
                 self._spec = True
-        caches = init_cache(self.cfg, self.n_slots, self.max_len)
+        if self._paged:
+            caches = init_paged_cache(self.cfg, self.n_slots, self.max_len,
+                                      n_pages=self._pool.n_pages,
+                                      page=self._page_size)
+        else:
+            caches = init_cache(self.cfg, self.n_slots, self.max_len)
         seen = jnp.zeros((self.n_slots, self.cfg.vocab_size), bool)
         self._sp_shardings = None
         if self.mesh is not None:
             from repro.sharding import (cache_shardings,
+                                        paged_cache_shardings,
                                         prefix_copy_shardings,
                                         sampling_param_shardings)
+            shard_fn = (paged_cache_shardings if self._paged
+                        else cache_shardings)
             caches = jax.device_put(
-                caches, cache_shardings(self.cfg, caches, self.mesh))
+                caches, shard_fn(self.cfg, caches, self.mesh))
             sh = sampling_param_shardings(
                 {"seen": seen, **blank_slot_params(self.n_slots)},
                 self.mesh)
@@ -298,12 +417,17 @@ class Engine:
             self._sp_shardings = sh
             # pin the prefix copy's output to the cache layout: the copy
             # stays mesh-local (src->dst row movement only, no gather,
-            # no reshard before the next fused step consumes the result)
-            self._copy = jax.jit(
-                partial(copy_prefix, copy_recurrent=self._has_recurrent),
-                donate_argnums=(0,),
-                out_shardings=prefix_copy_shardings(self.cfg, caches,
-                                                    self.mesh))
+            # no reshard before the next fused step consumes the result).
+            # Paged mode never row-copies slot-to-slot (prefix reuse is
+            # page aliasing / page copies), so the pin only applies to
+            # the contiguous layout.
+            if not self._paged:
+                self._copy = jax.jit(
+                    partial(copy_prefix,
+                            copy_recurrent=self._has_recurrent),
+                    donate_argnums=(0,),
+                    out_shardings=prefix_copy_shardings(self.cfg, caches,
+                                                        self.mesh))
         self._caches = caches
         self._seen = seen
 
@@ -337,25 +461,52 @@ class Engine:
             return 0
         for st in self._sched.admit():
             hit = st.prefix_len > 0
-            self_donor = hit and st.prefix_src == st.slot
-            # recycled slots keep stale attention rows (masked out by the
-            # per-slot position), but recurrent rwkv/mamba state carries
-            # over and must be zeroed — and quantized-cache scale leaves
-            # are cleared so stale rows dequantize to exact zeros. A
-            # SELF-donor hit skips the reset: the slot's own rows ARE the
-            # prefix (zeroing them first would destroy what the in-place
-            # "copy" reuses); its stale rows past the prefix stay masked
-            # by the per-slot position like any recycled slot.
-            if self._admit_reset and not self_donor:
-                self._caches = self._reset(self._caches, st.slot)
-            if hit and not self_donor:
-                # admission order matters: an earlier admission in this
-                # same batch may be this one's donor, and its copy has
-                # already landed by the time we read its rows here
-                self._caches = self._copy(self._caches,
-                                          jnp.int32(st.slot),
-                                          jnp.int32(st.prefix_src),
-                                          jnp.int32(st.prefix_len))
+            if self._paged:
+                # paged admission actions (serve/paging.py), in order:
+                # recurrent reset -> zero fresh pages' scale rows ->
+                # land the prefix rows (spill restore or page copy).
+                # Aliased pages need nothing — they ARE the donor's rows.
+                acts = st.paged or {}
+                if self._has_recurrent:
+                    self._caches = self._reset(self._caches, st.slot)
+                if self._quantized and acts.get("fresh"):
+                    self._caches = self._reset_pages(
+                        self._caches,
+                        jnp.asarray(self._pad_pages(acts["fresh"])))
+                if "blob" in acts:
+                    self._caches = self._scatter_pages(
+                        self._caches, acts["blob"],
+                        jnp.asarray(self._pad_pages(acts["blob_dst"])))
+                elif "copy_src" in acts:
+                    # admission order matters: an earlier admission in
+                    # this batch may own (or share) the source pages,
+                    # and its writes have already landed
+                    self._caches = self._copy_pages(
+                        self._caches,
+                        jnp.asarray(self._pad_pages(acts["copy_dst"])),
+                        jnp.asarray(self._pad_pages(acts["copy_src"])))
+            else:
+                self_donor = hit and st.prefix_src == st.slot
+                # recycled slots keep stale attention rows (masked out by
+                # the per-slot position), but recurrent rwkv/mamba state
+                # carries over and must be zeroed — and quantized-cache
+                # scale leaves are cleared so stale rows dequantize to
+                # exact zeros. A SELF-donor hit skips the reset: the
+                # slot's own rows ARE the prefix (zeroing them first
+                # would destroy what the in-place "copy" reuses); its
+                # stale rows past the prefix stay masked by the per-slot
+                # position like any recycled slot.
+                if self._admit_reset and not self_donor:
+                    self._caches = self._reset(self._caches, st.slot)
+                if hit and not self_donor:
+                    # admission order matters: an earlier admission in
+                    # this same batch may be this one's donor, and its
+                    # copy has already landed by the time we read its
+                    # rows here
+                    self._caches = self._copy(self._caches,
+                                              jnp.int32(st.slot),
+                                              jnp.int32(st.prefix_src),
+                                              jnp.int32(st.prefix_len))
             # the repetition-penalty seen table always resets (it carries
             # the previous occupant's consumed-token set); a prefix hit
             # seeds it with the prefix ids — the exact row cold prefill
@@ -376,6 +527,13 @@ class Engine:
         self._events = []
         if not active:
             return 0
+        self.stats["concurrency_peak"] = max(
+            self.stats["concurrency_peak"], len(active))
+        if self._paged:
+            # page assignments are static per request life, so the table
+            # only changes at admission/retire boundaries — one small
+            # (n_slots, npages_max) int32 transfer per step
+            self._bt = jnp.asarray(self._sched.pool.block_table())
         # speculative rounds only when EVERY active slot is decoding: the
         # draft runs a truncated layer stack, so a prefilling slot (which
         # must populate ALL layers' caches) pins the step to the normal
@@ -421,11 +579,12 @@ class Engine:
         if self._sp_shardings is not None:
             sp_dev = jax.device_put(sp_dev, self._sp_shardings)
         t0 = serve_clock()
+        pkw = {"block_table": self._bt} if self._paged else {}
         ids, lps, self._caches, self._seen = self._fused(
             self.params, self._caches, self._seen, jnp.asarray(tokens),
             jnp.asarray(pos), jnp.asarray(nval), sp_dev,
             kv_len=kv_len, want_logprobs=want_lp,
-            any_sampled=any_sampled)
+            any_sampled=any_sampled, **pkw)
         ids = np.asarray(ids)                 # (B,) — the only per-step
         lps = np.asarray(lps) if want_lp else None  # device->host pulls
         # ONE clock (serve_clock) for step timing AND token timestamps:
@@ -497,11 +656,12 @@ class Engine:
         if self._sp_shardings is not None:
             sp_dev = jax.device_put(sp_dev, self._sp_shardings)
         pos_dev = jnp.asarray(pos)
+        pkw = {"block_table": self._bt} if self._paged else {}
         t0 = serve_clock()
         # 0. snapshot the ring rows this round will touch (codes+scales)
         snap = None
         if self._spec_has_ring:
-            snap = self._spec_snap(self._caches, pos_dev, S=S)
+            snap = self._spec_snap(self._caches, pos_dev, S=S, **pkw)
         # 1. draft k tokens through the predict-only path — one fused
         # launch for the whole loop (k is jit-static). The seen copy is
         # throwaway (rejected drafts must never reach the persistent
@@ -510,17 +670,18 @@ class Engine:
         tok_mat, q_mat, caches, _ = self._spec_draft(
             self.params, self._caches, self._seen,
             jnp.asarray(tokens[:, :1]), pos_dev, jnp.asarray(caps_arr),
-            sp_dev, k=k, kv_len=kv_len, any_sampled=any_sampled)
+            sp_dev, k=k, kv_len=kv_len, any_sampled=any_sampled, **pkw)
         # 2. undo the draft's ring writes BEFORE verify: the chunk reads
         # the pre-round window (read-before-write path in decode_attn)
         if self._spec_has_ring:
             caches = self._spec_restore(
-                caches, snap, pos_dev, jnp.zeros((B,), jnp.int32), S=S)
+                caches, snap, pos_dev, jnp.zeros((B,), jnp.int32), S=S,
+                **pkw)
         # 3. fused chunk verify + on-device acceptance
         committed, n_comm, lps, caches, self._seen = self._spec_verify(
             self.params, caches, self._seen, tok_mat, pos_dev,
             jnp.asarray(nval), sp_dev, q_mat, kv_len=kv_len,
-            want_logprobs=want_lp, any_sampled=any_sampled)
+            want_logprobs=want_lp, any_sampled=any_sampled, **pkw)
         comm_np = np.asarray(committed)
         nc_np = np.asarray(n_comm)
         lps_np = np.asarray(lps) if want_lp else None
@@ -557,7 +718,7 @@ class Engine:
         # prefix donors keep a clean window
         if self._spec_has_ring:
             caches = self._spec_restore(caches, snap, pos_dev,
-                                        jnp.asarray(starts), S=S)
+                                        jnp.asarray(starts), S=S, **pkw)
         self._caches = caches
         self._spec_k.update(accepted_total, drafted_total)
         self.stats["steps"] += 1

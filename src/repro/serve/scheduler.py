@@ -92,6 +92,7 @@ class RequestState:
     prefix_len: int = 0             # cache rows inherited from a donor
     prefix_src: Optional[int] = None      # donor slot of the hit
     donor_entry: Optional["PrefixEntry"] = None   # pinned until copied
+    paged: Optional[dict] = None    # paged-admission actions (paging.py)
 
     @property
     def in_prefill(self) -> bool:
@@ -153,7 +154,7 @@ class PrefixEntry:
     eviction from match until the engine's copy lands."""
 
     __slots__ = ("rid", "slot", "tokens", "_depth", "state", "retained",
-                 "refcount", "last_used")
+                 "refcount", "last_used", "pages", "spilled", "blob")
 
     def __init__(self, rid: int, slot: int, tokens: Sequence[int],
                  state: Optional[RequestState] = None):
@@ -165,6 +166,11 @@ class PrefixEntry:
         self.retained = False
         self.refcount = 0
         self.last_used = 0
+        # paged mode (serve/paging.PagedScheduler): device pages owned by
+        # a retained entry, plus the host-tier spill state
+        self.pages: Optional[List[int]] = None
+        self.spilled = False
+        self.blob = None                # host numpy pytree when spilled
 
     @property
     def depth(self) -> int:
@@ -370,11 +376,17 @@ class SlotScheduler:
             if donor is not None:
                 donor.refcount += 1           # pin across slot acquisition
             slot = self._acquire_slot()
-            if slot is None and donor is not None and donor.retained \
-                    and donor.refcount == 1:
+            if slot is None and donor is not None and donor.retained:
                 # last resort: hand the donor slot to the matching request
-                # itself — src == dst, the prefix rows are reused in place
-                slot = self._evict(donor)
+                # itself — src == dst, the prefix rows are reused in place.
+                # Pins held by EARLIER admissions in this same batch don't
+                # block the handoff: the engine performs copies in
+                # admission order, so their reads of the donor rows land
+                # before the new occupant's first write.
+                batch_pins = sum(1 for a in admitted
+                                 if a.donor_entry is donor)
+                if donor.refcount == 1 + batch_pins:
+                    slot = self._evict(donor)
             if slot is None:
                 if donor is not None:
                     donor.refcount -= 1

@@ -53,6 +53,12 @@ pollute it (drafting uses a throwaway copy).
 Oracle (tests/test_speculative.py): greedy speculative decode is
 token-identical to the non-speculative continuous path across the
 dense/GQA/ring/MoE/MLA x fp32/int8/fp8 grid.
+
+Paged engines (serve/paging.py) thread (block_table, page_size) through
+draft_round / spec_verify_step into the decode steps; the accept rule,
+position rewind and seen tables are layout-agnostic, and the ring
+snapshot/restore primitives take the same block table so rollback works
+across page boundaries.
 """
 from __future__ import annotations
 
@@ -181,7 +187,7 @@ def _round_keys(sparams, tag: int, extra=0):
 def draft_sample_step(params, caches, draft_seen, tokens, pos, n_valid,
                       sparams, draft_idx, *, cfg: ModelConfig,
                       draft_layers: int, kv_len=None, any_sampled=True,
-                      mesh=None):
+                      block_table=None, page_size=0, mesh=None):
     """One fused draft step: predict-only forward + on-device sampling.
 
     Mirrors decode_sample_step but (a) runs models/decode.draft_step,
@@ -193,7 +199,8 @@ def draft_sample_step(params, caches, draft_seen, tokens, pos, n_valid,
     (ids, q, new caches, new draft_seen)."""
     logits, caches = draft_step(params, cfg, caches, tokens, pos,
                                 draft_layers=draft_layers, n_valid=n_valid,
-                                kv_len=kv_len, mesh=mesh)
+                                kv_len=kv_len, block_table=block_table,
+                                page_size=page_size, mesh=mesh)
     B = tokens.shape[0]
     rows = logits[jnp.arange(B), jnp.maximum(n_valid - 1, 0),
                   :cfg.vocab_size].astype(jnp.float32)
@@ -214,7 +221,8 @@ def draft_sample_step(params, caches, draft_seen, tokens, pos, n_valid,
 
 def draft_round(params, caches, draft_seen, t0, pos, caps, sparams, *,
                 cfg: ModelConfig, draft_layers: int, k: int, kv_len=None,
-                any_sampled=True, mesh=None):
+                any_sampled=True, block_table=None, page_size=0,
+                mesh=None):
     """The whole k-step draft phase as ONE fused launch.
 
     Statically unrolls k draft_sample_step calls (k is a jit-static
@@ -234,7 +242,8 @@ def draft_round(params, caches, draft_seen, t0, pos, caps, sparams, *,
         ids, q, caches, draft_seen = draft_sample_step(
             params, caches, draft_seen, cur, pos + i, dn, sparams, i,
             cfg=cfg, draft_layers=draft_layers, kv_len=kv_len,
-            any_sampled=any_sampled, mesh=mesh)
+            any_sampled=any_sampled, block_table=block_table,
+            page_size=page_size, mesh=mesh)
         drafts.append(ids)
         qs.append(q)
         cur = ids[:, None]
@@ -283,7 +292,8 @@ def rejection_rule(p_rows, q_rows, drafts, d, u):
 
 def spec_verify_step(params, caches, seen, tokens, pos, n_valid, sparams,
                      q_probs, *, cfg: ModelConfig, kv_len=None,
-                     want_logprobs=False, any_sampled=True, mesh=None):
+                     want_logprobs=False, any_sampled=True,
+                     block_table=None, page_size=0, mesh=None):
     """Fused multi-token verify: ONE chunked decode_step over
     [t_0, t_1..t_k] scores every draft, then acceptance + the
     correction/bonus token are computed on device.
@@ -298,7 +308,9 @@ def spec_verify_step(params, caches, seen, tokens, pos, n_valid, sparams,
     logprobs or None, new caches, new seen). The persistent seen table
     gains exactly the fed-and-committed prefix t_0..t_a."""
     logits, caches = decode_step(params, cfg, caches, tokens, pos,
-                                 n_valid=n_valid, kv_len=kv_len, mesh=mesh)
+                                 n_valid=n_valid, kv_len=kv_len,
+                                 block_table=block_table,
+                                 page_size=page_size, mesh=mesh)
     B, S = tokens.shape
     V = cfg.vocab_size
     rows = logits[..., :V].astype(jnp.float32)                 # (B, S, V)

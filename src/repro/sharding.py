@@ -118,6 +118,17 @@ def cache_shardings(cfg: ModelConfig, caches: Any, mesh: Mesh) -> Any:
     return make_shardings(cache_pspecs(cfg, caches, mesh), mesh)
 
 
+def paged_cache_shardings(cfg: ModelConfig, caches: Any, mesh: Mesh) -> Any:
+    """NamedShardings for PAGED slot caches (decode.init_paged_cache
+    shapes). Row-pooled leaves (attention k/v + scales, MLA latents) have
+    no slot axis — physical rows are gathered per step through the block
+    table, so the row axis must stay whole on every device and only the
+    kv-head axis shards over "model" (when divisible). Recurrent leaves
+    keep their per-slot batch axis and follow the contiguous rules."""
+    from repro.models.decode import paged_cache_pspecs
+    return make_shardings(paged_cache_pspecs(cfg, caches, mesh), mesh)
+
+
 def prefix_copy_shardings(cfg: ModelConfig, caches: Any, mesh: Mesh) -> Any:
     """Output shardings that keep the jitted prefix-cache copy
     (models/decode.copy_prefix) MESH-LOCAL: the copy is pinned to the

@@ -1,6 +1,34 @@
 import os
 import sys
 
+import pytest
+
 # Tests run single-device (the dry-run sets its own 512-device env in
 # subprocesses; see test_distributed.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="module")
+def fresh_compile_cache():
+    """Opt-in module-scoped compile-cache reset for cache-HEAVY suites.
+
+    The serving suites (speculative, prefix-cache, paged-cache) compile
+    the largest programs in the run — chunked verify, statically
+    unrolled draft rounds, paged gathers — across full config grids.
+    Dropping the executables accumulated by the hundreds of preceding
+    tests keeps the CPU backend's compile arena small; full-suite runs
+    have segfaulted inside LLVM under the combined load. A suite opts in
+    with a module-local autouse shim:
+
+        @pytest.fixture(scope="module", autouse=True)
+        def _fresh(fresh_compile_cache):
+            yield
+
+    (Deliberately NOT autouse here: clearing between every module would
+    throw away cheap shared compilations and slow the whole run.)
+    """
+    import jax
+
+    jax.clear_caches()
+    yield
+    jax.clear_caches()

@@ -1,0 +1,493 @@
+"""Paged KV cache oracles + PagePool / PagedScheduler units.
+
+The correctness bar (ISSUE 10): Engine(paged=True) — fixed-size KV
+pages, per-request block tables, refcounted prefix-page aliasing, LRU
+spill of cold prefix pages to a host tier — is TOKEN-IDENTICAL to the
+contiguous engine on the serving oracle grid (dense/GQA/ring/MoE/MLA x
+fp32/int8/fp8, greedy AND seeded), including under self-speculative
+decoding and under page-pool over-commit (more concurrent requests than
+full-length contiguous slots would fit).
+
+Also here: the ISSUE 10 satellite regressions — retained-donor
+admission accounting (a retained prefix that is the only reclaimable
+capacity must not block admission when its only pins come from earlier
+admissions in the SAME admit() batch) and the speculative x prefix-cache
+interaction (a prefix-HIT slot entering spec rounds must match the cold
+non-speculative path token-for-token, with ring rollback rows crossing
+page boundaries).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (AltUpConfig, MLAConfig, ModelConfig, MoEConfig,
+                          SSMConfig)
+from repro.kernels import ops
+from repro.models.transformer import init_params
+from repro.serve.engine import Engine
+from repro.serve.paging import PagePool, PagedScheduler
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import SlotScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh(fresh_compile_cache):
+    # opt into the shared compile-cache reset (tests/conftest.py):
+    # cache-heavy serving suite — paged + contiguous engine pairs
+    # across the full oracle grid
+    yield
+
+
+CFG = ModelConfig(name="pgd", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                  altup=AltUpConfig(K=2))
+
+# the tentpole oracle grid: dense/GQA/ring/MoE/MLA x fp32/int8/fp8
+ORACLE_CFGS = {
+    "dense": CFG,
+    "gqa": CFG.replace(name="pgd-gqa", n_heads=4, n_kv_heads=2),
+    "ring": CFG.replace(name="pgd-win", window_size=4),
+    "int8": CFG.replace(name="pgd-i8", kv_cache_dtype="int8"),
+    "fp8": CFG.replace(name="pgd-f8", kv_cache_dtype="fp8"),
+    "ring-int8": CFG.replace(name="pgd-win8", window_size=4,
+                             kv_cache_dtype="int8"),
+    "moe": ModelConfig(name="pgd-moe", family="moe", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, altup=AltUpConfig(K=2),
+                       moe=MoEConfig(num_experts=4, top_k=2,
+                                     d_expert=32)),
+    "mla": ModelConfig(name="pgd-mla", family="mla_moe", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, altup=AltUpConfig(K=2),
+                       mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8,
+                                     qk_nope_head_dim=8,
+                                     qk_rope_head_dim=4, v_head_dim=8),
+                       moe=MoEConfig(num_experts=4, top_k=2, d_expert=32,
+                                     first_dense_layers=1, dense_d_ff=64)),
+    "mla-int8": None,  # filled below (replace of mla)
+}
+ORACLE_CFGS["mla-int8"] = ORACLE_CFGS["mla"].replace(
+    name="pgd-mla8", kv_cache_dtype="int8")
+
+_PARAMS = {}
+
+
+def params_of(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = init_params(KEY, cfg)
+    return _PARAMS[cfg.name]
+
+
+def make_prompts(n=5, shared=9, seed=0, vocab=128):
+    """n prompts, the last n-1 sharing a `shared`-token prefix with the
+    first (so the paged run exercises aliasing / page copies too)."""
+    rng = np.random.default_rng(seed)
+    sys_ids = rng.integers(1, vocab - 1, size=shared).tolist()
+    out = [sys_ids + rng.integers(1, vocab - 1, size=4).tolist()]
+    for _ in range(n - 1):
+        out.append(sys_ids + rng.integers(1, vocab - 1,
+                                          size=rng.integers(2, 6)).tolist())
+    return out
+
+
+def run_engine(cfg, prompts, sp_of, *, max_len=48, n_slots=3, **kw):
+    eng = Engine(cfg, params_of(cfg), max_len=max_len, n_slots=n_slots,
+                 prefill_chunk=4, **kw)
+    rids = [eng.submit(p, sampling=sp_of(i)) for i, p in enumerate(prompts)]
+    out = eng.run()
+    return [out[r].tokens for r in rids], eng
+
+
+# -----------------------------------------------------------------------------
+# tentpole oracle: paged == contiguous, greedy + seeded, full grid
+# -----------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(ORACLE_CFGS))
+def test_paged_matches_contiguous_greedy(name):
+    cfg = ORACLE_CFGS[name]
+    prompts = make_prompts()
+    greedy = lambda i: SamplingParams(max_new=8, temperature=0.0)
+    ref, _ = run_engine(cfg, prompts, greedy)
+    got, eng = run_engine(cfg, prompts, greedy, paged=True, page_size=8)
+    assert got == ref
+    assert eng._pool.pages_in_use_peak <= eng._pool.n_pages
+
+
+@pytest.mark.parametrize("name", ["dense", "gqa", "ring", "int8", "mla"])
+def test_paged_matches_contiguous_seeded(name):
+    cfg = ORACLE_CFGS[name]
+    prompts = make_prompts(seed=3)
+    sp = lambda i: SamplingParams(max_new=8, temperature=0.9, top_k=20,
+                                  top_p=0.95, seed=100 + i)
+    ref, _ = run_engine(cfg, prompts, sp)
+    got, _ = run_engine(cfg, prompts, sp, paged=True, page_size=8)
+    assert got == ref
+
+
+@pytest.mark.parametrize("name", ["dense", "ring", "int8"])
+def test_paged_speculative_matches_nonspec(name):
+    # greedy speculative paged decode == greedy non-spec contiguous:
+    # drafts, fused verify and rollback all read/write through the
+    # block table without changing a token
+    cfg = ORACLE_CFGS[name]
+    prompts = make_prompts(seed=5)
+    greedy = lambda i: SamplingParams(max_new=8, temperature=0.0)
+    ref, _ = run_engine(cfg, prompts, greedy)
+    got, eng = run_engine(cfg, prompts, greedy, paged=True, page_size=8,
+                          speculative=True)
+    assert got == ref
+    assert eng.stats["spec_rounds"] > 0
+
+
+def test_paged_overcommit_more_requests_than_full_slots():
+    # pool sized for 2 full-length requests, 8 slots: short shared-prefix
+    # requests must run >2-way concurrent (the contiguous layout could
+    # never hold them), finish, and stay token-identical
+    cfg = ORACLE_CFGS["dense"]
+    prompts = make_prompts(n=8, shared=8, seed=7)
+    greedy = lambda i: SamplingParams(max_new=4, temperature=0.0)
+    ref, _ = run_engine(cfg, prompts, greedy, max_len=32, n_slots=8)
+    got, eng = run_engine(cfg, prompts, greedy, max_len=32, n_slots=8,
+                          paged=True, page_size=8, n_pages=8)
+    assert got == ref
+    n_full_slots = (8 * 8) // 32
+    assert eng.stats["concurrency_peak"] > n_full_slots
+    assert eng._pool.pages_in_use_peak <= 8
+
+
+def test_paged_spill_tier_roundtrip():
+    # a pool too small for the trace forces LRU spill of retained prefix
+    # pages to the host tier; later hits restore from blobs — tokens
+    # must not move
+    cfg = ORACLE_CFGS["int8"]
+    prompts = make_prompts(n=8, shared=17, seed=11)
+    greedy = lambda i: SamplingParams(max_new=6, temperature=0.0)
+    ref, _ = run_engine(cfg, prompts, greedy, max_len=48, n_slots=4)
+    got, eng = run_engine(cfg, prompts, greedy, max_len=48, n_slots=4,
+                          paged=True, page_size=8, n_pages=12,
+                          host_spill_pages=12)
+    assert got == ref
+    assert eng._pool.spills > 0
+
+
+def test_paged_prefix_hit_matches_cold():
+    # refcounted page ALIASING replaces copy_prefix clones: a hit
+    # against a retained donor must decode identically to a cold engine
+    cfg = ORACLE_CFGS["dense"]
+    warm = make_prompts(n=1, shared=17, seed=13)[0]
+    follow = warm[:17] + [7, 11, 13]
+    greedy = lambda i: SamplingParams(max_new=8, temperature=0.0)
+    cold, _ = run_engine(cfg, [follow], greedy)
+
+    eng = Engine(cfg, params_of(cfg), max_len=48, n_slots=3,
+                 prefill_chunk=4, paged=True, page_size=8)
+    eng.submit(warm, sampling=SamplingParams(max_new=8, temperature=0.0))
+    eng.run()
+    rid = eng.submit(follow,
+                     sampling=SamplingParams(max_new=8, temperature=0.0))
+    hit = eng.run()[rid].tokens
+    assert hit == cold[0]
+    assert eng.stats["prefix_hits"] >= 1
+    assert eng._pool.alias_acquisitions >= 2   # two full 8-row pages
+
+
+# -----------------------------------------------------------------------------
+# satellite: speculative x prefix-cache interaction
+# -----------------------------------------------------------------------------
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["contiguous", "paged"])
+@pytest.mark.parametrize("seeded", [False, True],
+                         ids=["greedy", "seeded"])
+def test_spec_prefix_hit_matches_cold_nonspec(paged, seeded):
+    # a prefix-HIT slot entering speculative rounds must produce the
+    # same tokens as the cold path: the copied/aliased prefix rows feed
+    # draft + verify reads, and rejection rollback may not disturb the
+    # shared rows. Greedy gates against the cold NON-speculative
+    # contiguous engine (greedy spec is token-identical to non-spec);
+    # seeded gates hit-spec against cold-spec on the same engine kind —
+    # sampled acceptance is rejection sampling, which preserves
+    # marginals, not the non-spec token stream.
+    cfg = ORACLE_CFGS["dense"]
+    warm = make_prompts(n=1, shared=17, seed=17)[0]
+    follow = warm[:17] + [3, 5, 9]
+    kw = {"paged": True, "page_size": 8} if paged else {}
+    warm_sp = SamplingParams(max_new=8, temperature=0.0)
+    if seeded:
+        # the adaptive-k controller is engine-global, so the cold
+        # reference replays the SAME warm request (prefix_cache=False
+        # keeps its follow-up cold) — only hit-vs-cold may differ
+        sp = SamplingParams(max_new=8, temperature=0.8, top_k=16, seed=42)
+        ref = Engine(cfg, params_of(cfg), max_len=48, n_slots=3,
+                     prefill_chunk=4, speculative=True,
+                     prefix_cache=False, **kw)
+        ref.submit(warm, sampling=warm_sp)
+        ref.run()
+        crid = ref.submit(follow, sampling=sp)
+        cold = [ref.run()[crid].tokens]
+    else:
+        sp = SamplingParams(max_new=8, temperature=0.0)
+        cold, _ = run_engine(cfg, [follow], lambda i: sp)
+
+    eng = Engine(cfg, params_of(cfg), max_len=48, n_slots=3,
+                 prefill_chunk=4, speculative=True, **kw)
+    eng.submit(warm, sampling=warm_sp)
+    eng.run()
+    rid = eng.submit(follow, sampling=sp)
+    hit = eng.run()[rid].tokens
+    assert hit == cold[0]
+    assert eng.stats["prefix_hits"] >= 1
+    assert eng.stats["spec_rounds"] > 0
+
+
+def test_spec_rollback_across_page_boundary():
+    # ring window 4 with page 4: every spec-round ring snapshot/restore
+    # straddles page boundaries (the window's wrapped rows land on two
+    # physical pages), and rejected drafts roll those rows back through
+    # the block table. Greedy spec == greedy non-spec contiguous.
+    cfg = ORACLE_CFGS["ring"]
+    prompts = make_prompts(n=4, shared=9, seed=19)
+    greedy = lambda i: SamplingParams(max_new=10, temperature=0.0)
+    ref, _ = run_engine(cfg, prompts, greedy)
+    got, eng = run_engine(cfg, prompts, greedy, paged=True, page_size=4,
+                          speculative=True)
+    assert got == ref
+    assert eng.stats["spec_rounds"] > 0
+
+
+# -----------------------------------------------------------------------------
+# PagePool units (pure host bookkeeping)
+# -----------------------------------------------------------------------------
+def test_pool_allocate_release_refcounts():
+    pool = PagePool(6, 4, n_slots=3, max_len=16)
+    f0 = pool.allocate(0, alias=[], n_fresh=2)
+    assert len(f0) == 2 and pool.free_pages == 4 and pool.pages_in_use == 2
+    # slot 1 aliases slot 0's first page
+    f1 = pool.allocate(1, alias=[f0[0]], n_fresh=1)
+    assert pool.ref[f0[0]] == 2 and pool.pages_in_use == 3
+    pool.release_slot(0)
+    # the shared page survives slot 0's release
+    assert pool.ref[f0[0]] == 1 and pool.ref[f0[1]] == 0
+    assert pool.free_pages == 4
+    pool.release_slot(1)
+    assert pool.free_pages == 6 and all(r == 0 for r in pool.ref)
+    assert pool.pages_in_use_peak == 3
+    assert pool.alias_acquisitions == 1 and pool.fresh_acquisitions == 3
+
+
+def test_pool_block_table_layout():
+    pool = PagePool(6, 4, n_slots=3, max_len=16)
+    pool.allocate(2, alias=[], n_fresh=3)
+    bt = pool.block_table()
+    assert bt.shape == (3, 4) and bt.dtype == np.int32
+    assert list(bt[2, :3]) == pool.slot_pages[2]
+    assert bt[0].tolist() == [0, 0, 0, 0]       # unassigned rows are 0
+
+
+def test_pool_capacity_and_pages_for():
+    pool = PagePool(4, 4, n_slots=2, max_len=16)
+    assert pool.pages_for(0) == 0 and pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1 and pool.pages_for(5) == 2
+    with pytest.raises(AssertionError):
+        PagePool(3, 4, n_slots=2, max_len=16)   # can't hold one request
+
+
+# -----------------------------------------------------------------------------
+# PagedScheduler units
+# -----------------------------------------------------------------------------
+def _drain(sched, steps=100):
+    """Run admitted requests to completion host-side (no engine)."""
+    for st in sched.admit():
+        sched.release_donor(st)
+    for _ in range(steps):
+        if not sched.active:
+            break
+        slot = next(iter(sched.active))
+        st = sched.active[slot]
+        st.pos = len(st.request.prompt) + st.request.sampling.max_new - 1
+        sched.retire(slot)
+        for a in sched.admit():
+            sched.release_donor(a)
+
+
+def test_paged_admission_reserves_worst_case():
+    # 6 pages of 4 rows; each request needs 2 pages worst-case, so only
+    # 3 of 4 ride despite 4 slots being free — the 4th waits for pages
+    pool = PagePool(6, 4, n_slots=4, max_len=16)
+    sched = PagedScheduler(4, 16, pool=pool)
+    for _ in range(4):
+        sched.submit([1, 2, 3, 4], SamplingParams(max_new=4))
+    admitted = sched.admit()
+    assert len(admitted) == 3 and sched.n_queued == 1
+    assert pool.free_pages == 0
+    st = admitted[0]
+    st.pos = 8
+    sched.retire(st.slot)
+    assert len(sched.admit()) == 1              # pages freed -> admitted
+
+
+def test_paged_retire_keeps_only_depth_pages():
+    pool = PagePool(6, 4, n_slots=2, max_len=16)
+    sched = PagedScheduler(2, 16, pool=pool, prefix_cache=True)
+    rid = sched.submit(list(range(1, 9)), SamplingParams(max_new=8))
+    (st,) = sched.admit()
+    assert len(pool.slot_pages[st.slot]) == 4   # worst case 16 rows
+    st.pos = 9                                  # wrote 9 rows -> 3 pages
+    sched.retire(st.slot)
+    entry = sched.index.get(rid)
+    assert len(entry.pages) == 3
+    assert pool.free_pages == 3                 # tail page released
+    assert st.slot not in pool.slot_pages       # slot row recycled
+    assert sched.n_free == 2
+
+
+def test_paged_donor_self_handoff_batch_pins():
+    # satellite regression: a retained donor that is the ONLY
+    # reclaimable capacity must not block admission when its only pins
+    # were taken by EARLIER admissions in the same admit() batch.
+    # Request A copies the donor's first page (short prefix, pin held);
+    # request B (LONGER shared prefix, so it matches the retained donor
+    # and not A's fresher resident entry) needs pages only the donor
+    # owns — it must be handed the donor's rows via a spill blob in the
+    # SAME admit(), not stall behind A's in-batch pin.
+    pool = PagePool(3, 8, n_slots=3, max_len=24)
+    sched = PagedScheduler(3, 24, pool=pool, prefix_cache=True,
+                           spill_fn=lambda e: "BLOB")
+    base = [1, 2, 3, 4, 5, 6, 7]
+    rid0 = sched.submit(base, SamplingParams(max_new=3))
+    (st0,) = sched.admit()
+    sched.release_donor(st0)
+    st0.pos = 9
+    sched.retire(st0.slot)                      # retains 2 of 3 pages
+    assert len(sched.index.get(rid0).pages) == 2
+
+    sched.submit(base[:5] + [9], SamplingParams(max_new=2))   # p = 5
+    sched.submit(base + [10], SamplingParams(max_new=2))      # p = 7
+    admitted = sched.admit()
+    assert len(admitted) == 2                   # the fix: BOTH admitted
+    a, b = admitted
+    assert a.prefix_len == 5 and "copy_src" in a.paged
+    assert b.prefix_len == 7 and b.paged.get("blob") == "BLOB"
+    assert pool.spills == 1
+    for st in admitted:
+        sched.release_donor(st)
+
+
+def test_paged_donor_pinned_by_active_blocks_handoff():
+    # ...but a pin held by a PREVIOUS admit() batch (engine copy not
+    # yet landed) must still block the handoff until release_donor
+    pool = PagePool(3, 8, n_slots=3, max_len=24)
+    sched = PagedScheduler(3, 24, pool=pool, prefix_cache=True,
+                           spill_fn=lambda e: "BLOB")
+    base = [1, 2, 3, 4, 5, 6, 7]
+    sched.submit(base, SamplingParams(max_new=3))
+    (st0,) = sched.admit()
+    sched.release_donor(st0)
+    st0.pos = 9
+    sched.retire(st0.slot)
+
+    sched.submit(base[:5] + [9], SamplingParams(max_new=2))
+    (a,) = sched.admit()                        # pins the donor
+    sched.submit(base + [10], SamplingParams(max_new=2))
+    assert sched.admit() == []                  # pinned: no handoff
+    sched.release_donor(a)
+    (b,) = sched.admit()                        # unpinned: handoff
+    assert b.paged.get("blob") == "BLOB"
+    sched.release_donor(b)
+
+
+def test_contiguous_donor_self_handoff_batch_pins():
+    # same regression on the CONTIGUOUS SlotScheduler: retained donor in
+    # the last slot, pinned mid-batch by request A; request B (longer
+    # shared prefix -> matches the donor, not A's resident entry) must
+    # receive the donor slot (src == dst reuse) instead of stalling
+    sched = SlotScheduler(2, 16, prefix_cache=True)
+    base = [1, 2, 3, 4, 5, 6, 7]
+    sched.submit(base, SamplingParams(max_new=3))
+    (st0,) = sched.admit()
+    sched.release_donor(st0)
+    st0.pos = 9
+    sched.retire(st0.slot)                      # retained, holds slot
+
+    sched.submit(base[:5] + [9], SamplingParams(max_new=2))   # p = 5
+    sched.submit(base + [10], SamplingParams(max_new=2))      # p = 7
+    admitted = sched.admit()
+    assert len(admitted) == 2                   # the fix: BOTH admitted
+    a, b = admitted
+    assert a.prefix_len == 5 and a.prefix_src == st0.slot
+    assert b.prefix_len == 7 and b.prefix_src == st0.slot
+    assert b.slot == st0.slot                   # donor slot handed over
+    for st in admitted:
+        sched.release_donor(st)
+
+
+def test_paged_host_tier_budget():
+    # the host tier is itself LRU-bounded: blobs past host_budget pages
+    # drop out entirely (host_dropped) and the entry leaves the index
+    pool = PagePool(2, 4, n_slots=2, max_len=8)
+    sched = PagedScheduler(2, 8, pool=pool, prefix_cache=True,
+                           spill_fn=lambda e: "BLOB", host_budget=2)
+    for i in range(4):
+        sched.submit([10 + i, 20 + i, 30 + i], SamplingParams(max_new=2))
+        _drain(sched)
+    assert pool.spills >= 2
+    assert sched.host_pages_used <= 2
+    assert pool.host_dropped >= 1
+
+
+# -----------------------------------------------------------------------------
+# kernel-level: paged gather through the block table vs contiguous
+# -----------------------------------------------------------------------------
+def _paged_pool_of(k, page, perm):
+    """Scatter contiguous (B, T, Hk, dh) rows into a (R, ...) page pool
+    under a permuted page assignment; returns (pool, block_table)."""
+    B, T = k.shape[0], k.shape[1]
+    npp = T // page
+    R = len(perm) * page
+    pool = np.zeros((R,) + k.shape[2:], k.dtype)
+    bt = np.asarray(perm[: B * npp], np.int32).reshape(B, npp)
+    for b in range(B):
+        for j in range(npp):
+            pg = bt[b, j]
+            pool[pg * page:(pg + 1) * page] = k[b, j * page:(j + 1) * page]
+    return jnp.asarray(pool), jnp.asarray(bt)
+
+
+def test_paged_ragged_kernel_matches_contiguous():
+    B, T, H, Hk, dh, page = 3, 16, 4, 2, 8, 4
+    rng = np.random.default_rng(23)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, dh)), jnp.float32)
+    k = rng.standard_normal((B, T, Hk, dh)).astype(np.float32)
+    v = rng.standard_normal((B, T, Hk, dh)).astype(np.float32)
+    lengths = jnp.asarray([5, 16, 0], jnp.int32)
+    perm = rng.permutation(B * (T // page) + 2).tolist()
+    kp, bt = _paged_pool_of(k, page, perm)
+    vp, _ = _paged_pool_of(v, page, perm)
+    ref = ops.ragged_decode_attn(q, jnp.asarray(k), jnp.asarray(v), lengths)
+    got = ops.paged_ragged_decode_attn(q, kp, vp, lengths, bt,
+                                       page=page, t_max=T)
+    # NOT bitwise: the paged kernel's online softmax accumulates per
+    # page, the contiguous one per block_k — last-ulp differences only
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    assert np.all(np.asarray(got)[2] == 0.0)    # empty slot: exact zeros
+
+
+def test_paged_flash_kernel_bitwise():
+    # at equal block partition (block_k == page) the paged flash kernel
+    # is BITWISE identical to the contiguous one: same tiles, same
+    # accumulation order, only the index map differs
+    B, S, H, dh, page = 2, 8, 2, 8, 4
+    rng = np.random.default_rng(29)
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = rng.standard_normal((B, S, H, dh)).astype(np.float32)
+    v = rng.standard_normal((B, S, H, dh)).astype(np.float32)
+    ref = ops.mha_flash(q, jnp.asarray(k), jnp.asarray(v),
+                        causal=True, block_q=4, block_k=page)
+    perm = rng.permutation(B * (S // page) + 1).tolist()
+    kp, bt = _paged_pool_of(k, page, perm)
+    vp, _ = _paged_pool_of(v, page, perm)
+    got = ops.mha_flash_paged(q, kp, vp, bt, page=page, causal=True,
+                              block_q=4)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))

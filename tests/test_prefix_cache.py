@@ -24,6 +24,14 @@ from repro.serve.scheduler import PrefixEntry, PrefixIndex, SlotScheduler
 
 KEY = jax.random.PRNGKey(0)
 
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh(fresh_compile_cache):
+    # opt into the shared compile-cache reset (tests/conftest.py):
+    # cache-heavy serving suite — full oracle grids of jitted engines
+    yield
+
+
 CFG = ModelConfig(name="pfx", family="dense", n_layers=2, d_model=32,
                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
                   altup=AltUpConfig(K=2))

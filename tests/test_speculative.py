@@ -32,15 +32,11 @@ KEY = jax.random.PRNGKey(0)
 
 
 @pytest.fixture(scope="module", autouse=True)
-def _fresh_compile_cache():
-    # this module compiles the largest programs in the suite (chunked
-    # verify + statically-unrolled draft rounds across the full config
-    # grid); dropping the executables accumulated by the ~300 preceding
-    # tests keeps the CPU backend's compile arena small — full-suite
-    # runs have segfaulted inside LLVM under that combined load
-    jax.clear_caches()
+def _fresh(fresh_compile_cache):
+    # opt into the shared compile-cache reset (tests/conftest.py): this
+    # module compiles the largest programs in the suite (chunked verify
+    # + statically-unrolled draft rounds across the full config grid)
     yield
-    jax.clear_caches()
 
 
 CFG = ModelConfig(name="spec", family="dense", n_layers=2, d_model=32,
